@@ -1,0 +1,43 @@
+"""Tunable-parameters ablation (the paper's configurability claim):
+work reduction vs the group count G and vs K — reproducing the two
+scaling laws the multi-level filter depends on:
+
+  * G=1 (point-level only) -> Hamerly; G up to ~K/4 strengthens the
+    group filter until bound-maintenance overhead dominates.
+  * Work reduction grows with K (more centroids = more filterable
+    distance evaluations) — the reason the paper targets high-K.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans_plusplus, lloyd, yinyang
+from repro.data import make_points
+
+
+def main():
+    print("name,us_per_call,derived")
+    n, d = 32768, 32
+    # --- sweep G at fixed K ---
+    k = 128
+    pts = jnp.asarray(make_points(n, d, k, seed=0)[0])
+    init = kmeans_plusplus(jax.random.PRNGKey(1), pts, k)
+    base = lloyd(pts, init, 40, 1e-4)
+    for g in (1, 4, 13, 32, 64):
+        r = yinyang(pts, init, n_groups=g, max_iters=40, tol=1e-4)
+        wr = float(base.distance_evals) / float(r.distance_evals)
+        print(f"group_sweep/K{k}_G{g},,work_red={wr:.2f}x "
+              f"iters={int(r.n_iters)}")
+    # --- sweep K at the default G=K/10 ---
+    for k in (32, 128, 512):
+        pts = jnp.asarray(make_points(n, d, k, seed=0)[0])
+        init = kmeans_plusplus(jax.random.PRNGKey(1), pts, k)
+        base = lloyd(pts, init, 30, 1e-4)
+        r = yinyang(pts, init, max_iters=30, tol=1e-4)
+        wr = float(base.distance_evals) / float(r.distance_evals)
+        print(f"group_sweep/scalingK_{k},,work_red={wr:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Table analogue: filtered vs standard K-means across the
+UCI-like suite — wall time, speedup, distance-evaluation reduction.
+
+The paper reports 2.95x mean speedup (max 4.2x) for the FPGA pipeline
+vs an optimized CPU Lloyd. Here both algorithms run on the SAME device
+(this container's CPU via XLA), so the speedup isolates the paper's
+*algorithmic* contribution (the multi-level filter); the hardware
+pipeline contribution shows up in §Roofline instead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.kpynq import paper_suite
+from repro.core import kmeans_plusplus, lloyd, yinyang, yinyang_compact
+from repro.data import make_points
+
+
+def _time(fn, *args, repeats=1, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out.centroids)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out.centroids)
+    return out, (time.perf_counter() - t0) / repeats
+
+
+def run(limit=None, scale=1.0):
+    rows = []
+    suite = paper_suite[:limit]
+    for prob in suite:
+        n = max(int(prob.n_points * scale), 512)
+        pts_np, _, _ = make_points(n, prob.n_dims, prob.k, seed=0)
+        pts = jnp.asarray(pts_np)
+        init = kmeans_plusplus(jax.random.PRNGKey(1), pts, prob.k)
+        jit_lloyd = jax.jit(lambda p, i: lloyd(p, i, prob.max_iters,
+                                               prob.tol))
+        r_l, t_l = _time(jit_lloyd, pts, init)
+        # wall-clock: the compaction execution mode (actually skips work
+        # on CPU; the Pallas block-skip kernel is the TPU analogue)
+        r_y, t_y = _time(lambda p, i: yinyang_compact(
+            p, i, prob.n_groups, prob.max_iters, prob.tol), pts, init)
+        rows.append({
+            "dataset": prob.name, "n": n, "d": prob.n_dims, "k": prob.k,
+            "iters": int(r_l.n_iters),
+            "lloyd_ms": t_l * 1e3, "kpynq_ms": t_y * 1e3,
+            "speedup": t_l / t_y,
+            "evals_lloyd": float(r_l.distance_evals),
+            "evals_kpynq": float(r_y.distance_evals),
+            "work_reduction": float(r_l.distance_evals /
+                                    max(r_y.distance_evals, 1.0)),
+        })
+    return rows
+
+
+def main(scale=1.0, limit=None):
+    rows = run(limit=limit, scale=scale)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"kmeans_speedup/{r['dataset']},{r['kpynq_ms'] * 1e3:.1f},"
+              f"speedup={r['speedup']:.2f}x work_red="
+              f"{r['work_reduction']:.2f}x iters={r['iters']}")
+    sp = [r["speedup"] for r in rows]
+    wr = [r["work_reduction"] for r in rows]
+    print(f"kmeans_speedup/MEAN,,speedup={sum(sp) / len(sp):.2f}x "
+          f"max={max(sp):.2f}x work_red_mean={sum(wr) / len(wr):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

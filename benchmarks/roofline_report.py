@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run JSON cache (results/dryrun/)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh="16x16", tag=""):
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}{tag}.json")):
+        r = json.loads(f.read_text())
+        if tag == "" and r.get("tag"):
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    if not r.get("ok"):
+        return (f"{r['arch']:26s} {r['shape']:12s} FAILED: "
+                f"{r.get('error', '')[:60]}")
+    rl = r["roofline"]
+    return (f"{r['arch']:26s} {r['shape']:12s} "
+            f"C={rl['t_compute_s']:9.3e} M={rl['t_memory_s']:9.3e} "
+            f"N={rl['t_collective_s']:9.3e} dom={rl['bottleneck']:10s} "
+            f"useful={rl.get('useful_flops_ratio', 0):6.3f} "
+            f"roofline={rl.get('roofline_fraction', 0):7.4f}")
+
+
+def main():
+    print("name,us_per_call,derived")
+    for mesh in ("16x16", "2x16x16"):
+        rows = load(mesh)
+        for r in rows:
+            if r.get("ok"):
+                rl = r["roofline"]
+                t_star = max(rl["t_compute_s"], rl["t_memory_s"],
+                             rl["t_collective_s"])
+                print(f"roofline/{mesh}/{r['arch']}/{r['shape']},"
+                      f"{t_star * 1e6:.0f},"
+                      f"dom={rl['bottleneck']} "
+                      f"frac={rl.get('roofline_fraction', 0):.4f}")
+            else:
+                print(f"roofline/{mesh}/{r['arch']}/{r['shape']},,FAILED")
+
+
+if __name__ == "__main__":
+    main()

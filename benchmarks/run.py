@@ -1,0 +1,36 @@
+"""Benchmark harness: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV per line.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problem sizes (CI-friendly)")
+    args = ap.parse_args()
+    scale = 0.1 if args.quick else 1.0
+
+    from . import filter_efficiency, group_sweep, kernel_bench
+    from . import kmeans_speedup, roofline_report
+
+    print("# === paper Table: KPynq vs standard K-means ===", flush=True)
+    kmeans_speedup.main(scale=scale)
+    print("# === filter efficiency (multi-level filter rates) ===",
+          flush=True)
+    filter_efficiency.main()
+    print("# === kernel microbench + block-skip model ===", flush=True)
+    kernel_bench.main()
+    print("# === tunable parameters: group-count / K ablation ===",
+          flush=True)
+    group_sweep.main()
+    print("# === roofline table (from dry-run cache) ===", flush=True)
+    roofline_report.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from
+results/dryrun/*.json (idempotent: replaces the marker block)."""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "dryrun"
+MARKER = "<!-- ROOFLINE_TABLE -->"
+
+
+def table() -> str:
+    rows = []
+    for f in sorted(RESULTS.glob("*__16x16.json")):
+        r = json.loads(f.read_text())
+        if r.get("tag"):
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED |  |  |  |  |  |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rl['t_compute_s']:.2e} | {rl['t_memory_s']:.2e} "
+            f"| {rl['t_collective_s']:.2e} | {rl['bottleneck']} "
+            f"| {rl.get('useful_flops_ratio', float('nan')):.3f} "
+            f"| {rl.get('roofline_fraction', float('nan')):.5f} |")
+    head = ("| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | useful | roofline |\n|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text()
+    block = MARKER + "\n" + table() + "\n"
+    if MARKER in text:
+        # replace from marker to the next section header
+        pattern = re.escape(MARKER) + r".*?(?=\n## |\Z)"
+        text = re.sub(pattern, block, text, flags=re.S)
+    exp.write_text(text)
+    print("EXPERIMENTS.md §Roofline updated "
+          f"({len(list(RESULTS.glob('*__16x16.json')))} cells present)")
+
+
+if __name__ == "__main__":
+    main()

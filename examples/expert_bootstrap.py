@@ -1,0 +1,53 @@
+"""KPynq inside the LM stack: K-means-bootstrapped MoE routing.
+
+The paper's fast K-means is used as a sub-system of MoE training:
+expert router weights are initialised to centroid directions of the
+token-embedding distribution, so experts start as owners of coherent
+embedding-space regions. This example measures routing balance
+(entropy / max-load) of kmeans-init vs random-init routers.
+
+  PYTHONPATH=src python examples/expert_bootstrap.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.integrations import kmeans_router_init
+from repro.models import init_params
+
+
+def routing_stats(params, cfg, tokens):
+    embeds = jnp.take(params["embed"], tokens.reshape(-1), axis=0)
+    router = params["layers"]["moe"]["router"][0]           # layer 0
+    logits = embeds.astype(jnp.float32) @ router.astype(jnp.float32)
+    top1 = jnp.argmax(logits, axis=-1)
+    counts = jnp.bincount(top1, length=cfg.n_experts)
+    probs = counts / counts.sum()
+    entropy = -jnp.sum(jnp.where(probs > 0, probs * jnp.log(probs), 0.0))
+    return float(entropy), float(counts.max() / counts.mean())
+
+
+def main():
+    cfg = get_config("llama4-scout-17b-a16e").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 512),
+                                0, cfg.vocab)
+
+    ent_rand, load_rand = routing_stats(params, cfg, tokens)
+    params_km = kmeans_router_init(params, cfg, tokens)
+    ent_km, load_km = routing_stats(params_km, cfg, tokens)
+
+    max_ent = np.log(cfg.n_experts)
+    print(f"[expert_bootstrap] experts={cfg.n_experts} "
+          f"(max entropy {max_ent:.2f})")
+    print(f"  random router: entropy={ent_rand:.3f} "
+          f"max/mean load={load_rand:.2f}")
+    print(f"  kmeans router: entropy={ent_km:.3f} "
+          f"max/mean load={load_km:.2f}")
+    print("  -> kmeans init gives experts coherent embedding regions "
+          "at near-balanced load")
+
+
+if __name__ == "__main__":
+    main()

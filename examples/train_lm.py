@@ -1,0 +1,78 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+on a learnable synthetic corpus, with fault-tolerant checkpointing.
+
+  PYTHONPATH=src python examples/train_lm.py                # ~100M params
+  PYTHONPATH=src python examples/train_lm.py --tiny --steps 60   # CI-size
+
+The corpus is a deterministic affine token chain (t+1 = 7*t+3 mod V)
+so the loss measurably collapses once the model memorises the map —
+a real end-to-end learning signal, not noise-fitting.
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import TokenPipeline
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import ResilientLoop
+from repro.train.steps import init_train_state, make_train_step
+
+
+def lm_100m() -> ArchConfig:
+    # ~102M params: 12L, d=768, 12H, ff=3072, vocab=8192 (GPT-2-small-ish)
+    return ArchConfig(
+        name="repro-lm-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=12, head_dim=64, d_ff=3072, vocab=8192,
+        q_chunk=256, loss_chunk=256, dtype="float32", remat="none")
+
+
+def lm_tiny() -> ArchConfig:
+    return dataclasses.replace(lm_100m(), n_layers=2, d_model=128,
+                               n_heads=4, n_kv_heads=4, head_dim=32,
+                               d_ff=512, vocab=512, name="repro-lm-tiny")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = lm_tiny() if args.tiny else lm_100m()
+    from repro.models.transformer import param_shapes
+    n_params = sum(int(np.prod(s)) for s in jax.tree.leaves(
+        param_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple)))
+    print(f"[train_lm] {cfg.name}: {n_params / 1e6:.1f}M params")
+
+    seq = [0]
+    for _ in range(200_000):
+        seq.append((seq[-1] * 7 + 3) % cfg.vocab)
+    corpus = np.asarray(seq, dtype=np.int32)
+
+    pipeline = TokenPipeline(cfg, args.batch, args.seq, seed=0,
+                             corpus=corpus)
+    opt = AdamWConfig(lr_peak=1e-3, warmup_steps=max(args.steps // 10, 10),
+                      decay_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+
+    loop = ResilientLoop(step_fn, pipeline, args.ckpt_dir,
+                         ckpt_every=max(args.steps // 4, 25))
+    loop.run(state, args.steps)
+    losses = [m["loss"] for m in loop.metrics_log]
+    n = max(len(losses) // 10, 1)
+    print(f"[train_lm] loss: start={np.mean(losses[:n]):.3f} "
+          f"end={np.mean(losses[-n:]):.3f} "
+          f"({np.mean(losses[:n]) / max(np.mean(losses[-n:]), 1e-9):.1f}x drop)")
+    print(f"[train_lm] mean step time "
+          f"{np.mean([m['dt'] for m in loop.metrics_log[2:]]) * 1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

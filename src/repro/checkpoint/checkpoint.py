@@ -1,0 +1,104 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout (no external deps — npz shards + a JSON manifest):
+
+    <dir>/step_000123/
+        manifest.json          {step, tree structure, leaf shapes/dtypes}
+        shard_<host>.npz       one file per host: every leaf's
+                               host-local addressable data, concatenated
+                               by flat leaf index
+    <dir>/LATEST               atomic pointer (text: "step_000123")
+
+Properties needed at 1000+-node scale, scaled down honestly here:
+  * per-host shard files (no single-writer bottleneck),
+  * write-to-temp + atomic rename (a crashed save never corrupts LATEST),
+  * async save thread (training continues during serialization),
+  * ELASTIC restore: the manifest stores global shapes, restore
+    device_puts into ANY new mesh/sharding (mesh size can change
+    between runs — the npz holds full global arrays per leaf on a
+    single-process runtime; multi-host would store per-host slices +
+    offsets, same manifest format).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flat_with_paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save_checkpoint(ckpt_dir, step: int, state, *, async_: bool = False):
+    """Serialise ``state`` (any pytree of jax/np arrays) for ``step``."""
+    ckpt_dir = Path(ckpt_dir)
+
+    # Snapshot to host memory synchronously (cheap), write async.
+    flat, _ = _flat_with_paths(state)
+    host_leaves = [np.asarray(x) for x in flat]
+
+    def _write():
+        step_dir = ckpt_dir / f"step_{step:06d}"
+        tmp_dir = ckpt_dir / f".tmp_step_{step:06d}_{time.time_ns()}"
+        tmp_dir.mkdir(parents=True, exist_ok=True)
+        manifest = {
+            "step": step,
+            "leaves": [{"shape": list(x.shape), "dtype": str(x.dtype)}
+                       for x in host_leaves],
+        }
+        (tmp_dir / "manifest.json").write_text(json.dumps(manifest))
+        np.savez(tmp_dir / "shard_0.npz",
+                 **{f"leaf_{i}": x for i, x in enumerate(host_leaves)})
+        if step_dir.exists():
+            shutil.rmtree(step_dir)
+        tmp_dir.rename(step_dir)                     # atomic publish
+        latest_tmp = ckpt_dir / ".LATEST.tmp"
+        latest_tmp.write_text(step_dir.name)
+        latest_tmp.rename(ckpt_dir / "LATEST")       # atomic pointer
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ptr = Path(ckpt_dir) / "LATEST"
+    if not ptr.exists():
+        return None
+    return int(ptr.read_text().strip().split("_")[-1])
+
+
+def restore_checkpoint(ckpt_dir, like, *, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings`` may target a DIFFERENT mesh than
+    the one that saved — elastic restart."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    step_dir = ckpt_dir / f"step_{step:06d}"
+    data = np.load(step_dir / "shard_0.npz")
+    flat_like, treedef = jax.tree.flatten(like)
+    leaves = [data[f"leaf_{i}"] for i in range(len(flat_like))]
+    for got, want in zip(leaves, flat_like):
+        if tuple(got.shape) != tuple(want.shape):
+            raise ValueError(
+                f"checkpoint leaf shape {got.shape} != expected {want.shape}")
+    if shardings is not None:
+        flat_sh = treedef.flatten_up_to(shardings)
+        leaves = [jax.device_put(x, s) for x, s in zip(leaves, flat_sh)]
+    else:
+        leaves = [jax.device_put(np.asarray(x)) for x in leaves]
+    return treedef.unflatten(leaves), step

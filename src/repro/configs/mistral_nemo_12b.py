@@ -1,0 +1,8 @@
+"""Mistral-Nemo-Base-2407 12B [dense] — 128k context."""
+from .base import ArchConfig, MLAConfig, SSMConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mistral-nemo-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=131072, rope_theta=1e6,
+))

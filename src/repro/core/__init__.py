@@ -1,0 +1,14 @@
+"""KPynq core: work-efficient triangle-inequality K-means in JAX."""
+from .api import KMeans
+from .distances import pairwise_dists, pairwise_sq_dists, rowwise_dists
+from .compact import yinyang_compact
+from .distributed import distributed_yinyang
+from .init import kmeans_plusplus, random_init
+from .kmeans import KMeansResult, group_centroids, lloyd, yinyang
+
+__all__ = [
+    "KMeans", "KMeansResult", "lloyd", "yinyang", "group_centroids",
+    "kmeans_plusplus", "random_init", "distributed_yinyang",
+    "yinyang_compact",
+    "pairwise_dists", "pairwise_sq_dists", "rowwise_dists",
+]

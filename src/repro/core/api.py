@@ -1,0 +1,85 @@
+"""Public sklearn-flavoured API for the KPynq K-means family."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kmeans as _km
+from .init import kmeans_plusplus, random_init
+
+
+class KMeans:
+    """Exact K-means with KPynq's multi-level triangle-inequality filters.
+
+    Parameters
+    ----------
+    n_clusters : K
+    algorithm : 'lloyd' | 'hamerly' | 'yinyang'
+        'hamerly' = the paper's point-level filter alone (one group);
+        'yinyang' = point-level + group-level filters (the full KPynq
+        multi-level filter).
+    n_groups : group count for 'yinyang' (default K//10, the paper-family
+        heuristic).
+    init : 'k-means++' | 'random'
+    """
+
+    def __init__(self, n_clusters: int, algorithm: str = "yinyang",
+                 n_groups: int | None = None, init: str = "k-means++",
+                 max_iters: int = 100, tol: float = 1e-4, seed: int = 0):
+        if algorithm not in ("lloyd", "hamerly", "yinyang"):
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        self.n_clusters = n_clusters
+        self.algorithm = algorithm
+        self.n_groups = n_groups
+        self.init = init
+        self.max_iters = max_iters
+        self.tol = tol
+        self.seed = seed
+        self.result_: _km.KMeansResult | None = None
+
+    def _init_centroids(self, points):
+        key = jax.random.PRNGKey(self.seed)
+        if self.init == "k-means++":
+            return kmeans_plusplus(key, points, self.n_clusters)
+        return random_init(key, points, self.n_clusters)
+
+    def fit(self, points) -> "KMeans":
+        points = jnp.asarray(points)
+        init_c = self._init_centroids(points)
+        if self.algorithm == "lloyd":
+            res = _km.lloyd(points, init_c, self.max_iters, self.tol)
+        elif self.algorithm == "hamerly":
+            res = _km.yinyang(points, init_c, n_groups=1,
+                              max_iters=self.max_iters, tol=self.tol)
+        else:
+            res = _km.yinyang(points, init_c, n_groups=self.n_groups,
+                              max_iters=self.max_iters, tol=self.tol)
+        self.result_ = jax.tree.map(jax.device_get, res)
+        return self
+
+    # sklearn-style accessors ------------------------------------------------
+    @property
+    def cluster_centers_(self):
+        return self.result_.centroids
+
+    @property
+    def labels_(self):
+        return self.result_.assignments
+
+    @property
+    def inertia_(self):
+        return float(self.result_.inertia)
+
+    @property
+    def n_iter_(self):
+        return int(self.result_.n_iters)
+
+    @property
+    def distance_evals_(self):
+        """Work-efficiency counter: distance evaluations performed."""
+        return float(self.result_.distance_evals)
+
+    def predict(self, points):
+        from .distances import pairwise_dists
+        d = pairwise_dists(jnp.asarray(points), self.result_.centroids)
+        return jax.device_get(jnp.argmin(d, axis=1))

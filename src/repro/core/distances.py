@@ -1,0 +1,34 @@
+"""Distance primitives shared by the K-means family.
+
+All bound arithmetic is fp32 (the filters must never prune the true
+nearest centroid); the bulk matmul term may run in bf16 on TPU via the
+Pallas kernel in ``repro.kernels`` — this module is the pure-jnp
+reference semantics used by the algorithm layer and the oracles.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distances, (N, D) x (K, D) -> (N, K).
+
+    Expanded as ||x||^2 - 2 x.c + ||c||^2 so the dominant term is a
+    single (N, D) x (D, K) matmul (MXU-friendly on the target hardware).
+    """
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (N, 1)
+    c2 = jnp.sum(c * c, axis=-1)                          # (K,)
+    d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]
+    return jnp.maximum(d2, 0.0)                           # numerical floor
+
+
+def pairwise_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(pairwise_sq_dists(x, c))
+
+
+def rowwise_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """d(x_i, c_i) for paired rows, (N, D) x (N, D) -> (N,)."""
+    diff = x.astype(jnp.float32) - c.astype(jnp.float32)
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))

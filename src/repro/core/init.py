@@ -1,0 +1,36 @@
+"""Centroid initialization: random subset and k-means++ (both jittable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .distances import pairwise_sq_dists
+
+
+def random_init(key: jax.Array, points: jnp.ndarray, k: int) -> jnp.ndarray:
+    idx = jax.random.choice(key, points.shape[0], shape=(k,), replace=False)
+    return points[idx].astype(jnp.float32)
+
+
+def kmeans_plusplus(key: jax.Array, points: jnp.ndarray, k: int) -> jnp.ndarray:
+    """k-means++ seeding (Arthur & Vassilvitskii) as a lax.fori_loop."""
+    n = points.shape[0]
+    pts = points.astype(jnp.float32)
+    key, sub = jax.random.split(key)
+    first = pts[jax.random.randint(sub, (), 0, n)]
+    centroids = jnp.zeros((k, pts.shape[1]), jnp.float32).at[0].set(first)
+    min_d2 = pairwise_sq_dists(pts, first[None])[:, 0]
+
+    def body(i, carry):
+        key, centroids, min_d2 = carry
+        key, sub = jax.random.split(key)
+        # Sample proportional to D^2 (guard the all-zero corner case).
+        probs = jnp.where(jnp.sum(min_d2) > 0, min_d2, jnp.ones_like(min_d2))
+        idx = jax.random.categorical(sub, jnp.log(probs + 1e-30))
+        c = pts[idx]
+        centroids = centroids.at[i].set(c)
+        d2 = pairwise_sq_dists(pts, c[None])[:, 0]
+        return key, centroids, jnp.minimum(min_d2, d2)
+
+    _, centroids, _ = jax.lax.fori_loop(1, k, body, (key, centroids, min_d2))
+    return centroids

@@ -1,0 +1,78 @@
+"""Integrations of KPynq K-means into the LM stack.
+
+1. ``kmeans_router_init`` — bootstrap MoE router weights from K-means
+   centroids over (embedded) token vectors: experts start as Voronoi
+   owners of embedding-space regions instead of random hyperplanes.
+2. ``cluster_kv_cache`` — compress a long-context KV cache by replacing
+   each key/value sequence with K weighted centroids (approximate
+   attention memory for the long_500k serving regime).
+Both use the filtered (work-efficient) algorithm, so bootstrap cost is
+a small fraction of Lloyd's.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .init import kmeans_plusplus
+from .kmeans import yinyang
+
+
+def kmeans_router_init(params: dict, cfg, sample_tokens: jnp.ndarray,
+                       seed: int = 0) -> dict:
+    """Returns params with every layer's MoE router re-initialised to
+    centroid directions of the token-embedding distribution."""
+    if cfg.family != "moe":
+        raise ValueError("router bootstrap only applies to MoE archs")
+    embeds = jnp.take(params["embed"], sample_tokens.reshape(-1), axis=0)
+    embeds = embeds.astype(jnp.float32)
+    init = kmeans_plusplus(jax.random.PRNGKey(seed), embeds, cfg.n_experts)
+    res = yinyang(embeds, init, max_iters=25, tol=1e-4)
+    centroids = res.centroids / (
+        jnp.linalg.norm(res.centroids, axis=-1, keepdims=True) + 1e-6)
+    router = centroids.T.astype(params["embed"].dtype)      # (D, E)
+    new_router = jnp.broadcast_to(router[None], (cfg.n_layers, *router.shape))
+    out = dict(params)
+    layers = dict(params["layers"])
+    moe = dict(layers["moe"])
+    moe["router"] = new_router
+    layers["moe"] = moe
+    out["layers"] = layers
+    return out
+
+
+def cluster_kv_cache(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     n_clusters: int, seed: int = 0):
+    """Compress (S, H, Dh) key/value tensors to (K, H, Dh) centroid pairs
+    + per-centroid counts (for count-weighted attention scores).
+
+    Keys are clustered per head with the filtered algorithm; values are
+    averaged within each key-cluster (the standard KV-clustering
+    approximation)."""
+    s, h, dh = k_cache.shape
+    ks, vs, counts = [], [], []
+    for head in range(h):
+        pts = k_cache[:, head].astype(jnp.float32)
+        init = kmeans_plusplus(jax.random.PRNGKey(seed + head), pts,
+                               n_clusters)
+        res = yinyang(pts, init, max_iters=15, tol=1e-3)
+        onehot = jax.nn.one_hot(res.assignments, n_clusters,
+                                dtype=jnp.float32)
+        cnt = onehot.sum(0)
+        v_mean = (onehot.T @ v_cache[:, head].astype(jnp.float32)) / \
+            jnp.maximum(cnt[:, None], 1.0)
+        ks.append(res.centroids)
+        vs.append(v_mean)
+        counts.append(cnt)
+    return (jnp.stack(ks, axis=1), jnp.stack(vs, axis=1),
+            jnp.stack(counts, axis=1))
+
+
+def clustered_attention_scores(q: jnp.ndarray, k_centroids: jnp.ndarray,
+                               counts: jnp.ndarray, scale: float):
+    """Attention over clustered keys: softmax(q.k_c * scale + log n_c) —
+    each centroid stands for n_c original positions."""
+    scores = jnp.einsum("hd,khd->hk", q.astype(jnp.float32),
+                        k_centroids) * scale
+    scores = scores + jnp.log(jnp.maximum(counts.T, 1.0))
+    return jax.nn.softmax(scores, axis=-1)

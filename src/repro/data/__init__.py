@@ -1,0 +1,4 @@
+"""Data pipelines."""
+from .pipeline import PrefetchingLoader, TokenPipeline, make_points
+
+__all__ = ["TokenPipeline", "PrefetchingLoader", "make_points"]

@@ -1,0 +1,93 @@
+"""Data pipelines: sharded synthetic + file-backed token streams, and
+point-cloud generators for the K-means workloads.
+
+Design: the host produces GLOBAL batches deterministically from
+(seed, step) — so any host can regenerate any step's batch, which is
+what makes restart-from-checkpoint and elastic re-sharding trivial (no
+data-loader state to persist beyond the step counter). A background
+prefetch thread keeps ``depth`` batches ahead of the training loop
+(compute/host-IO overlap).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+class TokenPipeline:
+    """Deterministic synthetic LM batches (or memory-mapped corpus)."""
+
+    def __init__(self, cfg, batch: int, seq: int, seed: int = 0,
+                 corpus: np.ndarray | None = None):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.corpus = corpus
+
+    def global_batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        if self.corpus is not None:
+            starts = rng.integers(0, len(self.corpus) - self.seq - 1,
+                                  size=self.batch)
+            toks = np.stack([self.corpus[s:s + self.seq + 1]
+                             for s in starts])
+        else:
+            toks = rng.integers(0, self.cfg.vocab,
+                                size=(self.batch, self.seq + 1),
+                                dtype=np.int32)
+        out = {"tokens": toks[:, :-1].astype(np.int32),
+               "labels": toks[:, 1:].astype(np.int32)}
+        if self.cfg.n_vision_tokens:
+            out["vision_embeds"] = rng.standard_normal(
+                (self.batch, self.cfg.n_vision_tokens, self.cfg.d_model),
+                dtype=np.float32).astype(np.dtype(self.cfg.dtype))
+        return out
+
+
+class PrefetchingLoader:
+    """Wraps a pipeline with a device-put prefetch thread."""
+
+    def __init__(self, pipeline, shardings, start_step: int = 0,
+                 depth: int = 2):
+        self.pipeline = pipeline
+        self.shardings = shardings
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.step = start_step
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self.pipeline.global_batch(step)
+            device_batch = jax.device_put(batch, self.shardings)
+            self.q.put((step, device_batch))
+            step += 1
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def make_points(n: int, d: int, k: int, seed: int = 0,
+                cluster_std: float = 1.0, spread: float = 8.0):
+    """Gaussian-blob point cloud with ground-truth structure (the
+    UCI-like synthetic stand-in; see configs/kpynq.py)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((k, d)).astype(np.float32) * spread
+    assign = rng.integers(0, k, size=n)
+    pts = centers[assign] + rng.standard_normal((n, d)).astype(np.float32) \
+        * cluster_std
+    return pts.astype(np.float32), centers, assign

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: centroid accumulation as a one-hot MXU matmul.
+
+Scatter-add is hostile to the TPU; the native formulation is
+  sums   = onehot(assign)^T @ points        (K, N) x (N, D)
+  counts = onehot(assign)^T @ 1
+The kernel tiles N and builds the (tile_n, K) one-hot on the fly from
+the int32 assignment tile (broadcasted_iota compare — no HBM one-hot
+materialisation), then accumulates (K, D) partial sums across the N
+grid dimension in the revisited output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _centroid_update_kernel(a_ref, x_ref, sums_ref, counts_ref, *, k: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    a = a_ref[...]                                          # (tn, 1) int32
+    x = x_ref[...].astype(jnp.float32)                      # (tn, D)
+    ks = jax.lax.broadcasted_iota(jnp.int32, (a.shape[0], k), 1)
+    onehot = (a == ks).astype(jnp.float32)                  # (tn, K)
+    sums_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (K, D)
+    counts_ref[...] += jnp.sum(onehot, axis=0, keepdims=True).T  # (K, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "interpret"))
+def centroid_update(points: jnp.ndarray, assignments: jnp.ndarray, *,
+                    k: int, tile_n: int = 512, interpret: bool = False):
+    """(N, D), (N,) int32 -> ((K, D) sums fp32, (K,) counts fp32)."""
+    n, d = points.shape
+    n_pad = (-n) % tile_n
+    xp = jnp.pad(points, ((0, n_pad), (0, 0)))
+    # padded rows get assignment -1: matches no centroid, contributes 0
+    ap = jnp.pad(assignments.astype(jnp.int32), (0, n_pad),
+                 constant_values=-1)[:, None]
+    grid = (xp.shape[0] // tile_n,)
+    sums, counts = pl.pallas_call(
+        functools.partial(_centroid_update_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ap, xp)
+    return sums, counts[:, 0]

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: tiled pairwise squared distances (Distance Calculator).
+
+KPynq's Distance Calculator PE array maps to the MXU: the -2*x@c^T term
+is a (tile_n, D) x (D, tile_k) matmul per grid cell; the norm terms are
+cheap VPU reductions fused into the same block. HBM->VMEM streaming is
+expressed with BlockSpec (the TPU analogue of the paper's DMA stream).
+
+Tile defaults are MXU-aligned (multiples of 128 in the lane dim, 8 in
+sublanes); D is carried whole per block — K-means dimensionality
+(<= a few hundred) fits VMEM comfortably:
+  VMEM/block = tile_n*D + tile_k*D + tile_n*tile_k floats
+  (256*256 + 128*256 + 256*128) * 4B = 0.5 MiB << 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dist_kernel(x_ref, c_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)                     # (tn, D)
+    c = c_ref[...].astype(jnp.float32)                     # (tk, D)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)            # (tn, 1)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]                  # (1, tk)
+    cross = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # MXU, fp32 acc
+    out_ref[...] = jnp.maximum(x2 - 2.0 * cross + c2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_k", "interpret"))
+def pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray, *,
+                      tile_n: int = 256, tile_k: int = 128,
+                      interpret: bool = False) -> jnp.ndarray:
+    """(N, D) x (K, D) -> (N, K) squared distances. Pads N/K to tiles."""
+    n, d = x.shape
+    k = c.shape[0]
+    n_pad = (-n) % tile_n
+    k_pad = (-k) % tile_k
+    xp = jnp.pad(x, ((0, n_pad), (0, 0)))
+    cp = jnp.pad(c, ((0, k_pad), (0, 0)))
+    grid = (xp.shape[0] // tile_n, cp.shape[0] // tile_k)
+    out = pl.pallas_call(
+        _dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, tile_k), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], cp.shape[0]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(xp, cp)
+    return out[:n, :k]

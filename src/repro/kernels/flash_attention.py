@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+Why it exists in a K-means paper's framework: the roofline baselines
+(EXPERIMENTS.md §Roofline) show the attention archs' memory term is
+dominated by HBM-materialised (S, S) score tensors — XLA cannot fuse
+matmul->softmax->matmul chains into VMEM. This kernel is the standard
+fix: tile q into (block_q) rows and stream kv in (block_k) columns,
+keeping scores, the running max m, and the running denominator l in
+VMEM scratch the whole time. Score traffic against HBM: ZERO.
+
+Grid: (batch*heads, S/block_q, S/block_k) — kv index innermost
+("arbitrary" semantics) so the output block is revisited and the
+softmax renormalisation accumulates in place. Causality skips whole
+kv blocks above the diagonal via @pl.when (the same block-granular
+work-skipping idea as the KPynq filter kernel).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, block_q: int, block_k: int, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block filter: kv block strictly above the diagonal -> skip
+    @pl.when(kj * block_k <= qi * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                   # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                   # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                       # (bq, bk)
+        # in-block causal mask
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, -jnp.inf)
+
+        m_prev = m_ref[...]                                 # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev),
+                          jnp.exp(m_prev - m_safe), 0.0)    # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Causal attention. q, k, v: (B, H, S, D) -> (B, H, S, D).
+    GQA callers broadcast kv heads before the call (zero-copy view)."""
+    b, h, s, d = q.shape
+    assert k.shape == v.shape == (b, h, s, d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    scale = 1.0 / math.sqrt(d)
+    bh = b * h
+    qf = q.reshape(bh, s, d)
+    kf = k.reshape(bh, s, d)
+    vf = v.reshape(bh, s, d)
+    grid = (bh, s // block_q, s // block_k)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q,
+                          block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b_, i, j: (b_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b_, i, j: (b_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors one kernel in this package with identical
+signature and output semantics; tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(N, D), (K, D) -> (N, K) squared distances, fp32 accumulate."""
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    c2 = jnp.sum(cf * cf, axis=-1)
+    return jnp.maximum(x2 - 2.0 * (xf @ cf.T) + c2[None, :], 0.0)
+
+
+def filtered_assign_ref(x: jnp.ndarray, c: jnp.ndarray,
+                        block_mask: jnp.ndarray,
+                        tile_n: int, tile_k: int):
+    """Block-skip argmin oracle.
+
+    ``block_mask[i, j]`` (bool) says whether the distance block
+    (points i*tile_n:(i+1)*tile_n) x (centroids j*tile_k:(j+1)*tile_k)
+    must be computed. Skipped blocks contribute +inf.
+    Returns (min_sq_dist (N,), argmin (N,) int32); rows whose every
+    block is skipped return (+inf, -1).
+    """
+    n, k = x.shape[0], c.shape[0]
+    d2 = pairwise_sq_dists_ref(x, c)
+    mask_full = jnp.repeat(jnp.repeat(block_mask, tile_n, axis=0),
+                           tile_k, axis=1)[:n, :k]
+    d2 = jnp.where(mask_full, d2, jnp.inf)
+    best = jnp.min(d2, axis=1)
+    idx = jnp.where(jnp.isfinite(best), jnp.argmin(d2, axis=1), -1)
+    return best, idx.astype(jnp.int32)
+
+
+def centroid_update_ref(points: jnp.ndarray, assignments: jnp.ndarray,
+                        k: int):
+    """Segment sums + counts: (K, D) fp32 sums, (K,) fp32 counts."""
+    onehot = jax.nn.one_hot(assignments, k, dtype=jnp.float32)
+    return onehot.T @ points.astype(jnp.float32), jnp.sum(onehot, axis=0)
+
+
+def flash_attention_ref(q, k, v):
+    """Causal softmax attention oracle, (B, H, S, D) fp32 softmax."""
+    import math
+    b, h, s, d = q.shape
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(d)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask, sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_intra_ref(c, b, x, cum):
+    """Intra-chunk SSD oracle. c,b: (G,Q,N); x: (G,Q,P); cum: (G,Q)."""
+    scores = jnp.einsum("gin,gjn->gij", c.astype(jnp.float32),
+                        b.astype(jnp.float32))
+    diff = cum[:, :, None] - cum[:, None, :]
+    q = c.shape[1]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None], jnp.exp(diff.astype(jnp.float32)), 0.0)
+    return jnp.einsum("gij,gjp->gip", scores * decay,
+                      x.astype(jnp.float32))

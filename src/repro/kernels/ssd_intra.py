@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused SSD intra-chunk pass (Mamba-2).
+
+The §Roofline baselines show the SSM archs' memory term is dominated by
+HBM-materialised (Q, Q) intra-chunk tensors (scores, decay, their
+product) — XLA cannot fuse dot -> mask/exp -> dot. This kernel computes
+
+    y_intra = ((C B^T) ∘ tril(exp(cum_i - cum_j))) x̄
+
+for one (batch·chunk, head) grid cell entirely in VMEM: the (Q, Q)
+scores/decay never touch HBM. The inter-chunk recurrence (tiny
+(N, P) states) stays in jnp (associative_scan — see models/mamba.py).
+
+VMEM per cell (Q=128, N=128, P=64 fp32):
+  C,B: 2*Q*N*4 = 128 KiB; x: Q*P*4 = 32 KiB; scores: Q*Q*4 = 64 KiB
+  — comfortably inside a v5e core's 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_intra_kernel(c_ref, b_ref, x_ref, cum_ref, out_ref):
+    c = c_ref[0].astype(jnp.float32)                       # (Q, N)
+    b = b_ref[0].astype(jnp.float32)                       # (Q, N)
+    x = x_ref[0].astype(jnp.float32)                       # (Q, P)
+    cum = cum_ref[0].astype(jnp.float32)                   # (Q, 1)
+    q = c.shape[0]
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    diff = cum - cum.reshape(1, q)                         # cum_i - cum_j
+    i_pos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    j_pos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(i_pos >= j_pos, jnp.exp(diff), 0.0)
+    out_ref[0] = jax.lax.dot_general(
+        scores * decay, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra(c: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray,
+              cum: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """Fused intra-chunk SSD.
+
+    c, b: (G_cells, Q, N) — per (batch*chunk*head) cell state matrices
+    x:    (G_cells, Q, P) — discretised inputs
+    cum:  (G_cells, Q)    — within-chunk cumulative log-decay
+    returns y_intra: (G_cells, Q, P) fp32.
+    """
+    g, q, n = c.shape
+    p = x.shape[-1]
+    return pl.pallas_call(
+        _ssd_intra_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, 1), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, q, p), jnp.float32),
+        interpret=interpret,
+    )(c, b, x, cum[..., None])

@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run tagged optimized variants of the three
+chosen cells against their cached baselines and print the
+hypothesis -> change -> before -> after log lines for EXPERIMENTS.md.
+
+Cells (selection per the §Perf rubric):
+  * hymba-1.5b / train_4k    — worst train-cell roofline fraction
+                               (memory-bound: SSD intra-chunk tensors)
+  * qwen2-7b / prefill_32k   — most collective-bound (uneven KV-head
+                               sharding causes score resharding)
+  * kpynq-kmeans / fit       — the paper's own technique at scale
+                               (memory-bound: (N, K) distance pass)
+"""
+
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+
+from ..configs import get_config                      # noqa: E402
+from .dryrun import RESULTS, run_cell, run_kmeans_cell  # noqa: E402
+
+
+def _load(arch, shape, tag=""):
+    f = RESULTS / f"{arch}__{shape}__16x16{tag}.json"
+    return json.loads(f.read_text()) if f.exists() else None
+
+
+def _fmt(rec):
+    if not rec or not rec.get("ok"):
+        return "MISSING/FAIL"
+    rl = rec["roofline"]
+    return (f"C={rl['t_compute_s']:.3e} M={rl['t_memory_s']:.3e} "
+            f"N={rl['t_collective_s']:.3e} dom={rl['bottleneck']} "
+            f"frac={rl.get('roofline_fraction', 0):.5f}")
+
+
+def run_variant(arch, shape, tag, cfg_kw, force=False):
+    cfg = dataclasses.replace(get_config(arch), **cfg_kw)
+    return run_cell(arch, shape, False, force=force, cfg_override=cfg,
+                    tag=f"__{tag}")
+
+
+def main(force: bool = False):
+    print("=== hillclimb: hymba-1.5b train_4k (memory-bound) ===")
+    base = _load("hymba-1.5b", "train_4k")
+    print("  baseline:", _fmt(base))
+    for tag, kw in [
+        ("opt_dp2d", dict(batch_2d=True)),
+        ("opt_chunk64", dict(ssm=dataclasses.replace(
+            get_config("hymba-1.5b").ssm, chunk=64))),
+        ("opt_dp2d_chunk64", dict(batch_2d=True,
+                                  ssm=dataclasses.replace(
+                                      get_config("hymba-1.5b").ssm,
+                                      chunk=64))),
+        ("opt_dp2d_c64_cp", dict(batch_2d=True, attn_cp=True,
+                                 ssm=dataclasses.replace(
+                                     get_config("hymba-1.5b").ssm,
+                                     chunk=64))),
+        # d_state=16 => balanced SSD chunk ~= 16 (intra cost ~ Q/token,
+        # inter cost ~ N/token; Q=128 over-pays intra by 8x)
+        ("opt_dp2d_c16_cp", dict(batch_2d=True, attn_cp=True,
+                                 ssm=dataclasses.replace(
+                                     get_config("hymba-1.5b").ssm,
+                                     chunk=16))),
+        # + triangular causal slicing (~47% less score traffic)
+        ("opt_full", dict(batch_2d=True, attn_cp=True, causal_slice=True,
+                          ssm=dataclasses.replace(
+                              get_config("hymba-1.5b").ssm, chunk=16))),
+        # A/B: same minus batch_2d (isolates its resharding collectives)
+        ("opt_cp_c16_tri", dict(attn_cp=True, causal_slice=True,
+                                ssm=dataclasses.replace(
+                                    get_config("hymba-1.5b").ssm,
+                                    chunk=16))),
+    ]:
+        rec = run_variant("hymba-1.5b", "train_4k", tag, kw, force=force)
+        print(f"  {tag:18s}:", _fmt(rec))
+
+    print("=== hillclimb: qwen2-7b prefill_32k (collective-bound) ===")
+    base = _load("qwen2-7b", "prefill_32k")
+    print("  baseline:", _fmt(base))
+    for tag, kw in [
+        ("opt_cp", dict(attn_cp=True)),
+        ("opt_tp", dict(serve_tp_params=True)),
+        ("opt_cp_tp", dict(attn_cp=True, serve_tp_params=True)),
+        ("opt_tri", dict(causal_slice=True)),
+        ("opt_tri_tp", dict(causal_slice=True, serve_tp_params=True)),
+        ("opt_tri_cp_tp", dict(causal_slice=True, attn_cp=True,
+                               serve_tp_params=True)),
+    ]:
+        rec = run_variant("qwen2-7b", "prefill_32k", tag, kw, force=force)
+        print(f"  {tag:18s}:", _fmt(rec))
+
+    print("=== bonus: qwen2-7b decode_32k (int8 KV cache) ===")
+    base = _load("qwen2-7b", "decode_32k")
+    print("  baseline:", _fmt(base))
+    rec = run_variant("qwen2-7b", "decode_32k", "opt_kv8",
+                      dict(kv_cache_dtype="int8", serve_tp_params=True),
+                      force=force)
+    print(f"  {'opt_kv8_tp':18s}:", _fmt(rec))
+
+    print("=== hillclimb: kpynq-kmeans fit (the paper's technique) ===")
+    base = _load("kpynq-kmeans", "fit")
+    print("  baseline:", _fmt(base))
+    for tag, kw in [
+        ("opt_sq", dict(opt_sq=True)),
+        ("opt_sq_comp", dict(opt_sq=True, compress=True)),
+    ]:
+        rec = run_kmeans_cell(False, force=force, tag=f"__{tag}", **kw)
+        print(f"  {tag:18s}:", _fmt(rec))
+
+
+if __name__ == "__main__":
+    import sys
+    main(force="--force" in sys.argv)

@@ -1,0 +1,142 @@
+"""Partition rules: parameter/optimizer/activation/cache PartitionSpecs.
+
+The 2D(+pod) strategy:
+  * 'model' — tensor/expert parallel: attention heads & head projections,
+    MLP hidden dim, MoE expert axis, vocab dim of embed/lm_head.
+  * 'data'  — DP for activations AND FSDP for the non-TP dim of every
+    large parameter (ZeRO-3-style; GSPMD inserts the all-gathers).
+  * 'pod'   — pure DP across pods (batch only; params replicated across
+    pods, gradients all-reduced over the inter-pod links).
+
+Rules are by leaf NAME (the param tree is flat enough that names are
+unambiguous), so new layer types compose by adding a name entry.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import batch_axes
+
+# leaf name -> PartitionSpec WITHOUT the stacked layer axis
+_RULES = {
+    # embeddings / head
+    "embed": P("model", "data"),
+    "lm_head": P("data", "model"),
+    "final_norm": P(None),
+    # attention (GQA)
+    "wq": P("data", "model"), "wk": P("data", "model"),
+    "wv": P("data", "model"), "wo": P("model", "data"),
+    "bq": P("model"), "bk": P("model"), "bv": P("model"),
+    # attention (MLA)
+    "w_dq": P("data", None), "w_uq": P(None, "model"),
+    "w_dkv": P("data", None), "w_kr": P("data", None),
+    "w_ukv": P(None, "model"),
+    # dense MLP
+    "w_gate": P("data", "model"), "w_up": P("data", "model"),
+    "w_down": P("model", "data"),
+    # MoE (expert axis leads)
+    "router": P("data", None),
+    "moe/w_gate": P("model", "data", None),
+    "moe/w_up": P("model", "data", None),
+    "moe/w_down": P("model", None, "data"),
+    # mamba
+    "in_proj": P("data", "model"), "dt_proj": P("data", None),
+    "conv_w": P(None, "model"),
+    "out_proj": P("model", "data"), "out_norm": P("model"),
+    "A_log": P(None), "dt_bias": P(None), "D": P(None),
+    # norms / scales
+    "ln1": P(None), "ln2": P(None), "mix_na": P(None), "mix_nm": P(None),
+}
+
+
+def _rule_for(path: str) -> P:
+    name = path.split("/")[-1]
+    parent = "/".join(path.split("/")[-2:])
+    if parent in _RULES:
+        return _RULES[parent]
+    if name in _RULES:
+        return _RULES[name]
+    raise KeyError(f"no partition rule for param {path!r}")
+
+
+def param_pspecs(cfg, *, serve_tp: bool = False) -> dict:
+    """PartitionSpec tree matching models.param_shapes(cfg).
+
+    serve_tp=True drops the FSDP ('data') dim from every rule —
+    inference has no optimizer state to shard, and TP-only params avoid
+    the per-layer all-gather entirely."""
+    from ..models.transformer import param_shapes
+
+    def strip_data(spec):
+        return P(*(None if a == "data" else a for a in spec))
+
+    def walk(tree, prefix="", stacked=False):
+        out = {}
+        for k, v in tree.items():
+            p = f"{prefix}/{k}" if prefix else k
+            if isinstance(v, dict):
+                out[k] = walk(v, p, stacked=stacked or k == "layers")
+            else:
+                spec = _rule_for(p)
+                if serve_tp:
+                    spec = strip_data(spec)
+                if stacked:                      # leading L axis unsharded
+                    spec = P(None, *spec)
+                out[k] = spec
+        return out
+
+    return walk(param_shapes(cfg))
+
+
+def train_state_pspecs(cfg):
+    """TrainState(step, params, m, v) — moments shard like params."""
+    from ..train.steps import TrainState
+    pp = param_pspecs(cfg)
+    return TrainState(step=P(), params=pp, m=pp, v=pp)
+
+
+def batch_pspecs(cfg, mesh) -> dict:
+    b = batch_axes(mesh)
+    if getattr(cfg, "batch_2d", False):
+        b = b + ("model",)
+    spec = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.n_vision_tokens:
+        spec["vision_embeds"] = P(b, None, None)
+    return spec
+
+
+def cache_pspecs(cfg, mesh, *, batch: int) -> dict:
+    """Decode-cache specs. Large-batch decode shards batch on the data
+    axes and sequence on 'model' (context parallel); batch=1 long-context
+    decode shards sequence over EVERY axis."""
+    b = batch_axes(mesh)
+    data_par = 1
+    for a in b:
+        data_par *= mesh.shape[a]
+    if batch >= data_par:
+        bspec, sspec = b, "model"
+    else:
+        bspec, sspec = None, (*b, "model")
+    spec: dict = {}
+    if cfg.family != "ssm":
+        if cfg.mla is not None:
+            spec["kvc"] = P(None, bspec, sspec, None)
+            spec["kpe"] = P(None, bspec, sspec, None)
+        else:
+            spec["k"] = P(None, bspec, sspec, None, None)
+            spec["v"] = P(None, bspec, sspec, None, None)
+            if getattr(cfg, "kv_cache_dtype", "native") == "int8":
+                spec["k_scale"] = P(None, bspec, sspec, None)
+                spec["v_scale"] = P(None, bspec, sspec, None)
+    if cfg.family in ("ssm", "hybrid"):
+        # head_dim (not heads) on 'model': head counts may be odd (25)
+        spec["ssm"] = P(None, bspec, None, None, "model")
+        spec["conv"] = P(None, bspec, None, "model")
+    return spec
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

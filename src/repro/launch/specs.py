@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct input factories for every (arch × shape) dry-run cell.
+
+Nothing here allocates: full-scale states come from jax.eval_shape over
+the real init functions (weak-type-correct, shardable stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import init_cache, init_params
+from ..train.steps import init_train_state
+from .mesh import batch_axes
+from .sharding import (batch_pspecs, cache_pspecs, param_pspecs,
+                       train_state_pspecs)
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_specs(cfg: ArchConfig, b: int, s: int) -> dict:
+    spec = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    if cfg.n_vision_tokens:
+        spec["vision_embeds"] = _sds((b, cfg.n_vision_tokens, cfg.d_model),
+                                     cfg.compute_dtype)
+    return spec
+
+
+def _key_spec():
+    return _sds((2,), jnp.uint32)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh):
+    """Returns (args: tuple of ShapeDtypeStructs, in_specs: matching
+    PartitionSpec pytrees, out_specs or None, kind)."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    bax = batch_axes(mesh)
+
+    if kind == "train":
+        state = jax.eval_shape(
+            functools.partial(init_train_state, cfg=cfg), _key_spec())
+        batch = _batch_specs(cfg, b, s)
+        in_specs = (train_state_pspecs(cfg), batch_pspecs(cfg, mesh))
+        out_specs = (train_state_pspecs(cfg), None)
+        return (state, batch), in_specs, out_specs, kind
+
+    params = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), _key_spec())
+    pspecs = param_pspecs(cfg, serve_tp=getattr(cfg, "serve_tp_params",
+                                                False))
+
+    if kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        bspecs = {"tokens": P(bax, None)}
+        if cfg.n_vision_tokens:
+            batch["vision_embeds"] = _sds(
+                (b, cfg.n_vision_tokens, cfg.d_model), cfg.compute_dtype)
+            bspecs["vision_embeds"] = P(bax, None, None)
+        cspecs = cache_pspecs(cfg, mesh, batch=b)
+        out_specs = ((P(bax, None, "model"), cspecs)
+                     if _data_par(mesh, bax) <= b else (None, cspecs))
+        return (params, batch), (pspecs, bspecs), out_specs, kind
+
+    # decode
+    cache = jax.eval_shape(
+        functools.partial(init_cache, cfg, b, s))
+    cspecs = cache_pspecs(cfg, mesh, batch=b)
+    dpar = _data_par(mesh, bax)
+    tok_spec = P(bax, None) if b >= dpar else P(None, None)
+    args = (params, cache, _sds((b, 1), jnp.int32), _sds((), jnp.int32))
+    in_specs = (pspecs, cspecs, tok_spec, P())
+    logits_spec = (P(bax, None, "model") if b >= dpar
+                   else P(None, None, "model"))
+    out_specs = (logits_spec, cspecs)
+    return args, in_specs, out_specs, kind
+
+
+def _data_par(mesh, bax) -> int:
+    n = 1
+    for a in bax:
+        n *= mesh.shape[a]
+    return n
+
+
+def reduced_cell(cfg: ArchConfig, shape_name: str):
+    """Tiny analogue of a cell for CPU integration tests."""
+    info = SHAPES[shape_name]
+    scale = dataclasses.replace(cfg.reduced())
+    return scale, dict(kind=info["kind"], seq=128, batch=4)

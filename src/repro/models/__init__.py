@@ -1,0 +1,6 @@
+"""Model substrate: config-driven decoder family."""
+from .transformer import (decode_step, forward, init_cache, init_params,
+                          loss_fn, param_shapes, prefill_forward)
+
+__all__ = ["init_params", "param_shapes", "forward", "loss_fn",
+           "decode_step", "init_cache", "prefill_forward"]

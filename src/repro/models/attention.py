@@ -1,0 +1,273 @@
+"""Attention variants: GQA (+MHA), MLA (multi-head latent attention).
+
+Training uses query-chunked attention (lax.scan over query blocks with a
+full key row per block) so the (S, S) score matrix never materialises —
+peak activation is (B, q_chunk, H, S), which is what lets prefill_32k
+fit per-device HBM. Decode takes a KV cache and a single query position.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import apply_rope
+
+
+def _constrain(t, *spec):
+    """Best-effort sharding constraint (no-op outside a mesh context)."""
+    try:
+        return jax.lax.with_sharding_constraint(t, P(*spec))
+    except Exception:
+        return t
+
+
+def _causal_chunk_attn(q, k, v, q_offset: jnp.ndarray, scale: float,
+                       cp: bool = False):
+    """q: (B, Cq, KV, R, Dh); k/v: (B, S, KV, Dh). Causal w.r.t. absolute
+    positions q_offset + i vs j. fp32 softmax.
+
+    cp=True (context-parallel): keep scores sharded over the KEY
+    sequence dim on 'model'. KV-head counts (4/5/8/24/40) rarely divide
+    the 16-way model axis — head sharding forces GSPMD to replicate or
+    reshard the (B,KV,R,Cq,S) score tensor (measured: ~135 GB/layer of
+    involuntary collectives on qwen2 prefill_32k). Sequence sharding
+    always divides, turning that into one small psum per chunk."""
+    s = k.shape[1]
+    cq = q.shape[1]
+    scores = jnp.einsum("bikrd,bjkd->bkrij", q, k).astype(jnp.float32) * scale
+    if cp:
+        scores = _constrain(scores, None, None, None, None, "model")
+    q_pos = q_offset + jnp.arange(cq)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = q_pos >= k_pos                                   # (Cq, S)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkrij,bjkd->bikrd", probs, v)
+
+
+def gqa_train(x, p, cfg, positions, return_kv: bool = False):
+    """x: (B, S, D) -> (B, S, D). p: attn param dict.
+    return_kv=True additionally returns (k, v) (the prefill cache)."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(d, h, dh).astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].reshape(d, kv, dh).astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].reshape(d, kv, dh).astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(h, dh).astype(x.dtype)
+        k = k + p["bk"].reshape(kv, dh).astype(x.dtype)
+        v = v + p["bv"].reshape(kv, dh).astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_cp:
+        k = _constrain(k, None, "model", None, None)
+        v = _constrain(v, None, "model", None, None)
+    scale = 1.0 / math.sqrt(dh)
+    rep = h // kv
+    qg = q.reshape(b, s, kv, rep, dh)
+
+    cq = min(cfg.q_chunk, s)
+    n_chunks = s // cq
+    q_chunks = qg.reshape(b, n_chunks, cq, kv, rep, dh).swapaxes(0, 1)
+
+    if cfg.unroll_chunks or cfg.causal_slice:
+        # python chunk loop (exact HLO costs / static triangular slices)
+        outs = []
+        for i in range(n_chunks):
+            if cfg.causal_slice:
+                kk, vv = k[:, :(i + 1) * cq], v[:, :(i + 1) * cq]
+            else:
+                kk, vv = k, v
+            outs.append(_causal_chunk_attn(q_chunks[i], kk, vv, i * cq,
+                                           scale, cp=cfg.attn_cp))
+        out = jnp.stack(outs)
+    else:
+        def body(_, xs):
+            i, qc = xs
+            return None, _causal_chunk_attn(qc, k, v, i * cq, scale,
+                                            cp=cfg.attn_cp)
+
+        _, out = jax.lax.scan(body, None,
+                              (jnp.arange(n_chunks), q_chunks))
+    out = out.swapaxes(0, 1).reshape(b, s, h * dh)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def quantize_kv(t):
+    """Per-(token, head) int8 quantization. t: (B, S, KV, Dh) ->
+    (int8 values, fp32 scales (B, S, KV))."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def gqa_decode(x, p, cfg, cache_k, cache_v, pos, cache_scales=None):
+    """x: (B, 1, D); cache_k/v: (B, Smax, KV, Dh); pos: scalar index.
+    Returns (out (B,1,D), new_k, new_v[, new_scales]).
+
+    cache_scales=(k_scale, v_scale) each (B, Smax, KV) activates the
+    int8 cache path: new entries are quantised per (token, head), the
+    cache is dequantised on read — HBM cache traffic halves (the decode
+    memory term is cache-read dominated at long S)."""
+    b, _, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(d, h, dh).astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].reshape(d, kv, dh).astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].reshape(d, kv, dh).astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(h, dh).astype(x.dtype)
+        k = k + p["bk"].reshape(kv, dh).astype(x.dtype)
+        v = v + p["bv"].reshape(kv, dh).astype(x.dtype)
+    posv = jnp.full((b, 1), pos)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    if cache_scales is not None:
+        ks, vs = cache_scales
+        k_q, k_s = quantize_kv(k)
+        v_q, v_s = quantize_kv(v)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k_q, (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v_q, (0, pos, 0, 0))
+        ks = jax.lax.dynamic_update_slice(ks, k_s, (0, pos, 0))
+        vs = jax.lax.dynamic_update_slice(vs, v_s, (0, pos, 0))
+        k_full = dequantize_kv(cache_k, ks, x.dtype)
+        v_full = dequantize_kv(cache_v, vs, x.dtype)
+        new_scales = (ks, vs)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+        k_full = cache_k.astype(x.dtype)
+        v_full = cache_v.astype(x.dtype)
+        new_scales = None
+    smax = cache_k.shape[1]
+    rep = h // kv
+    qg = q.reshape(b, 1, kv, rep, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bikrd,bjkd->bkrij", qg,
+                        k_full).astype(jnp.float32) * scale
+    valid = (jnp.arange(smax) <= pos)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrij,bjkd->bikrd", probs, v_full)
+    out = out.reshape(b, 1, h * dh)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    if cache_scales is not None:
+        return out, cache_k, cache_v, new_scales
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(x, p, cfg, positions):
+    """Shared projection math for MLA train/decode.
+
+    Returns q (B,S,H,nope+rope), kv_c (B,S,r_kv), k_pe (B,S,rope)."""
+    m = cfg.mla
+    q_c = jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(x.dtype))
+    q_c = q_c  # (optionally normed; lora-norm folded into init for brevity)
+    q = jnp.einsum("bsr,rhk->bshk", q_c,
+                   p["w_uq"].reshape(m.q_lora_rank, cfg.n_heads,
+                                     m.nope_dim + m.rope_dim).astype(x.dtype))
+    q_nope, q_pe = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    kv_c = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    k_pe = jnp.einsum("bsd,dk->bsk", x, p["w_kr"].astype(x.dtype))
+    k_pe = apply_rope(k_pe[:, :, None, :], positions,
+                      cfg.rope_theta)[:, :, 0, :]
+    return q, kv_c, k_pe
+
+
+def _mla_attend(q, kv_c, k_pe, p, cfg):
+    """Attention over latent cache. q: (B,Sq,H,nope+rope);
+    kv_c: (B,S,r); k_pe: (B,S,rope). Causality handled by caller mask."""
+    m = cfg.mla
+    h = cfg.n_heads
+    w_ukv = p["w_ukv"].reshape(m.kv_lora_rank, h, m.nope_dim + m.v_dim)
+    k_nope = jnp.einsum("bsr,rhk->bshk", kv_c,
+                        w_ukv[..., :m.nope_dim].astype(kv_c.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", kv_c,
+                   w_ukv[..., m.nope_dim:].astype(kv_c.dtype))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :],
+                                  (*k_pe.shape[:2], h, m.rope_dim))], axis=-1)
+    return q, k, v
+
+
+def mla_train(x, p, cfg, positions, return_kv: bool = False):
+    b, s, d = x.shape
+    m = cfg.mla
+    q, kv_c, k_pe = _mla_qkv(x, p, cfg, positions)
+    q, k, v = _mla_attend(q, kv_c, k_pe, p, cfg)
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+    h = cfg.n_heads
+    qg = q[:, :, :, None, :].reshape(b, s, h, 1, -1)
+    cq = min(cfg.q_chunk, s)
+    n_chunks = s // cq
+    q_chunks = qg.reshape(b, n_chunks, cq, h, 1, qg.shape[-1]).swapaxes(0, 1)
+
+    if cfg.attn_cp:
+        k = _constrain(k, None, "model", None, None)
+        v = _constrain(v, None, "model", None, None)
+    if cfg.unroll_chunks or cfg.causal_slice:
+        outs = []
+        for i in range(n_chunks):
+            if cfg.causal_slice:
+                kk, vv = k[:, :(i + 1) * cq], v[:, :(i + 1) * cq]
+            else:
+                kk, vv = k, v
+            outs.append(_causal_chunk_attn(q_chunks[i], kk, vv, i * cq,
+                                           scale, cp=cfg.attn_cp))
+        out = jnp.stack(outs)
+    else:
+        def body(_, xs):
+            i, qc = xs
+            return None, _causal_chunk_attn(qc, k, v, i * cq, scale,
+                                            cp=cfg.attn_cp)
+
+        _, out = jax.lax.scan(body, None, (jnp.arange(n_chunks), q_chunks))
+    out = out.swapaxes(0, 1).reshape(b, s, h * m.v_dim)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return out, kv_c, k_pe
+    return out
+
+
+def mla_decode(x, p, cfg, cache_kvc, cache_kpe, pos):
+    """MLA decode caches the COMPRESSED latents (B, Smax, r_kv) +
+    (B, Smax, rope) — the whole point of MLA's cache saving."""
+    b = x.shape[0]
+    m = cfg.mla
+    posv = jnp.full((b, 1), pos)
+    q, kv_c, k_pe = _mla_qkv(x, p, cfg, posv)
+    cache_kvc = jax.lax.dynamic_update_slice(
+        cache_kvc, kv_c.astype(cache_kvc.dtype), (0, pos, 0))
+    cache_kpe = jax.lax.dynamic_update_slice(
+        cache_kpe, k_pe.astype(cache_kpe.dtype), (0, pos, 0))
+    q, k, v = _mla_attend(q, cache_kvc.astype(x.dtype),
+                          cache_kpe.astype(x.dtype), p, cfg)
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+    scores = jnp.einsum("bihd,bjhd->bhij", q, k).astype(jnp.float32) * scale
+    smax = cache_kvc.shape[1]
+    valid = (jnp.arange(smax) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhij,bjhd->bihd", probs, v)
+    out = out.reshape(b, 1, cfg.n_heads * m.v_dim)
+    return (jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype)),
+            cache_kvc, cache_kpe)

@@ -1,0 +1,72 @@
+"""Shared transformer building blocks (pure JAX, bf16 compute/fp32 math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., S, H, Dh) rotated pairwise; positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]              # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u,
+                      w_down.astype(x.dtype))
+
+
+def cross_entropy_chunked(hidden, lm_head, labels, *, chunk: int = 1024,
+                          mask=None, unroll: bool = False):
+    """Chunked-over-sequence softmax CE so fp32 logits never materialise
+    at (B, S, V). hidden: (B, S, D), lm_head: (D, V), labels: (B, S).
+    Returns mean nll over unmasked tokens. ``unroll`` replaces the scan
+    with a Python loop (analysis artifacts: exact HLO costs)."""
+    b, s, d = hidden.shape
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    h = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    y = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    if mask is None:
+        m = jnp.ones((n_chunks, b, chunk), jnp.float32)
+    else:
+        m = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1).astype(jnp.float32)
+
+    def body(carry, xs):
+        hc, yc, mc = xs
+        logits = jnp.einsum("bsd,dv->bsv", hc,
+                            lm_head.astype(hc.dtype)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        loss_sum, n_tok = carry
+        return (loss_sum + jnp.sum(nll), n_tok + jnp.sum(mc)), None
+
+    carry = (jnp.float32(0), jnp.float32(0))
+    if unroll:
+        for i in range(n_chunks):
+            carry, _ = body(carry, (h[i], y[i], m[i]))
+    else:
+        carry, _ = jax.lax.scan(body, carry, (h, y, m))
+    loss_sum, n_tok = carry
+    return loss_sum / jnp.maximum(n_tok, 1.0)

@@ -1,0 +1,178 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked-scan formulation.
+
+The SSD primitive computes, per head h with state size N and head dim P:
+    s_t = exp(dt_t * A_h) * s_{t-1} + dt_t * B_t x_t^T        (N x P state)
+    y_t = C_t s_t + D_h x_t
+The chunked algorithm (Dao & Gu 2024) splits the sequence into chunks of
+Q tokens: an intra-chunk quadratic term (an attention-like (Q, Q) masked
+matmul — MXU work) plus an inter-chunk recurrence carried by a
+lax.scan over chunks (O(S/Q) sequential steps of (N x P) state math).
+Decode keeps the (H, P, N) state + a conv ring buffer — O(1) per token,
+which is why the ssm archs run the long_500k cell natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _causal_conv(xbc, conv_w, conv_cache=None):
+    """Depthwise causal conv1d, window W. xbc: (B, S, C); conv_w: (W, C).
+    With conv_cache (B, W-1, C) prepends history (decode path)."""
+    w = conv_w.shape[0]
+    if conv_cache is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_cache.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)              # (B, S+W-1, C)
+    out = sum(full[:, i:i + xbc.shape[1]] * conv_w[i][None, None].astype(xbc.dtype)
+              for i in range(w))
+    new_cache = full[:, -(w - 1):] if w > 1 else pad
+    return jax.nn.silu(out), new_cache
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int,
+                return_state: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,)<0; B,C: (B,S,G,N); D: (H,).
+    G (state groups) broadcasts over heads. Returns y: (B,S,H,P)
+    (+ final recurrent state (B,H,N,P) fp32 when return_state)."""
+    b, s_orig, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, s_orig)
+    # pad S to a chunk multiple: dt=0 padding is exact (decay exp(0)=1,
+    # zero discretised input -> padded steps are identity on the state)
+    pad = (-s_orig) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+    rep = h // g
+
+    xf = (x * dt[..., None]).astype(jnp.float32)            # discretised input
+    la = dt.astype(jnp.float32) * A[None, None, :]          # log-decay per tok
+    # reshape to chunks
+    xc = xf.reshape(b, nc, q, h, p)
+    lac = la.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, g, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, g, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(lac, axis=2)                           # (B,NC,Q,H)
+    total = cum[:, :, -1]                                   # (B,NC,H)
+
+    # --- intra-chunk quadratic term ---------------------------------
+    # decay(i<-j) = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,NC,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc)       # (B,NC,Q,Q,G)
+    scores = jnp.repeat(scores, rep, axis=-1)               # broadcast to H
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * decay, xc)
+
+    # --- inter-chunk recurrence (scan over chunks) -------------------
+    # chunk state contribution: sum_j exp(total - cum_j) B_j x_j
+    w_in = jnp.exp(total[:, :, None, :] - cum)              # (B,NC,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)                        # (B,NC,Q,H,N)
+    state_in = jnp.einsum("bcjhn,bcjhp,bcjh->bchnp", Bh, xc, w_in)
+
+    # Inter-chunk recurrence as a PARALLEL prefix (associative_scan):
+    # element (s, t) composes as (s_b + s_a * exp(t_b), t_a + t_b) —
+    # log-depth instead of a sequential while loop. This is both the
+    # faster TPU formulation (no serial chain over chunks) and what
+    # keeps HLO cost analysis trip-count-exact (no while body).
+    def combine(a, bb):
+        sa, ta = a
+        sb, tb = bb
+        return sa * jnp.exp(tb)[..., None, None] + sb, ta + tb
+
+    inc_states, _ = jax.lax.associative_scan(
+        combine, (state_in, total), axis=1)                 # (B,NC,H,N,P)
+    prev_states = jnp.concatenate(
+        [jnp.zeros((b, 1, h, n, p), jnp.float32), inc_states[:, :-1]],
+        axis=1)
+    final_state = inc_states[:, -1]
+
+    w_out = jnp.exp(cum)                                    # decay from chunk start
+    Ch = jnp.repeat(Cc, rep, axis=3)                        # (B,NC,Q,H,N)
+    y_inter = jnp.einsum("bcihn,bchnp,bcih->bcihp", Ch, prev_states, w_out)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = (y + x.astype(jnp.float32) * D[None, None, :, None]).astype(x.dtype)
+    y = y[:, :s_orig]
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_step(x, dt, A, B, C, D, state):
+    """Single-token recurrence. x: (B,H,P); dt: (B,H); B,C: (B,G,N);
+    state: (B,H,N,P) fp32. Returns (y (B,H,P), new_state)."""
+    h, g = x.shape[1], B.shape[1]
+    rep = h // g
+    da = jnp.exp(dt.astype(jnp.float32) * A[None, :])       # (B,H)
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=1)     # (B,H,N)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    xf = (x * dt[..., None]).astype(jnp.float32)
+    new_state = state * da[:, :, None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", Bh, xf)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return (y + x.astype(jnp.float32) * D[None, :, None]).astype(x.dtype), new_state
+
+
+def mamba_mixer_train(x, p, cfg, return_state: bool = False):
+    """Full Mamba-2 mixer. x: (B, S, D) -> (B, S, D).
+    return_state=True also returns (ssm_state, conv_cache) — prefill."""
+    b, s, d = x.shape
+    m = cfg.ssm
+    di, gn = m.d_inner, m.n_groups * m.d_state
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z = proj[..., :di]
+    xbc_raw = proj[..., di:]
+    dt = jnp.einsum("bsd,dh->bsh", x, p["dt_proj"].astype(x.dtype))
+    xbc, conv_cache = _causal_conv(xbc_raw, p["conv_w"])
+    xs = xbc[..., :di]
+    Bm = xbc[..., di:di + gn].reshape(b, s, m.n_groups, m.d_state)
+    Cm = xbc[..., di + gn:].reshape(b, s, m.n_groups, m.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
+    xh = xs.reshape(b, s, m.n_heads, m.head_dim)
+    y = ssd_chunked(xh, dt, A, Bm, Cm, p["D"].astype(jnp.float32),
+                    chunk=m.chunk, return_state=return_state)
+    if return_state:
+        y, final_state = y
+    y = y.reshape(b, s, di)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        return out, final_state, conv_cache
+    return out
+
+
+def mamba_mixer_decode(x, p, cfg, ssm_state, conv_cache):
+    """x: (B, 1, D). ssm_state: (B,H,N,P) fp32; conv_cache: (B,W-1,C)."""
+    b, _, d = x.shape
+    m = cfg.ssm
+    di, gn = m.d_inner, m.n_groups * m.d_state
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z = proj[..., :di]
+    xbc = proj[..., di:]
+    dt = jnp.einsum("bsd,dh->bsh", x, p["dt_proj"].astype(x.dtype))
+    xbc, conv_cache = _causal_conv(xbc, p["conv_w"], conv_cache)
+    xs = xbc[..., :di]
+    Bm = xbc[:, 0, di:di + gn].reshape(b, m.n_groups, m.d_state)
+    Cm = xbc[:, 0, di + gn:].reshape(b, m.n_groups, m.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs[:, 0].reshape(b, m.n_heads, m.head_dim)
+    y, ssm_state = ssd_decode_step(xh, dt, A, Bm, Cm,
+                                   p["D"].astype(jnp.float32), ssm_state)
+    y = y.reshape(b, 1, di)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    return (jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype)),
+            ssm_state, conv_cache)

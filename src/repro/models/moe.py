@@ -1,0 +1,59 @@
+"""Token-choice top-k MoE with sort-based (MegaBlocks-style) dispatch.
+
+Dense dispatch one-hots of shape (T, E, C) are ruled out at 32k-seq
+scale; instead tokens are argsorted by destination expert and packed
+into an (E, capacity, D) buffer — the batched expert matmul then runs
+at *active*-parameter FLOPs (6·N_active·D), which is what the roofline
+MODEL_FLOPS accounting expects. Expert-parallel sharding puts the E
+axis of the buffer and the expert weights on the 'model' mesh axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn(x, p, cfg):
+    """x: (B, S, D) -> (B, S, D). p: {'router': (D,E), 'w_gate'/'w_up':
+    (E, D, F), 'w_down': (E, F, D)}."""
+    b, s, d = x.shape
+    e, topk = cfg.n_experts, cfg.moe_top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf,
+                        p["router"].astype(x.dtype)).astype(jnp.float32)
+    gates, experts = jax.lax.top_k(logits, topk)            # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # flatten (token, k) pairs and sort by expert id
+    flat_expert = experts.reshape(-1)                       # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), topk)
+    flat_gate = gates.reshape(-1)
+    order = jnp.argsort(flat_expert)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+
+    # position of each entry within its expert group
+    counts = jnp.bincount(se, length=e)                     # (E,)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_group = jnp.arange(t * topk) - starts[se]
+
+    cap = int(cfg.moe_capacity_factor * t * topk / e) + 1
+    keep = pos_in_group < cap
+    dest = se * cap + jnp.where(keep, pos_in_group, 0)
+
+    buf = jnp.zeros((e * cap, d), x.dtype).at[dest].set(
+        jnp.where(keep[:, None], xf[st], 0), mode="drop")
+    buf = buf.reshape(e, cap, d)
+
+    # batched expert SwiGLU — the active-FLOPs matmuls
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                   p["w_down"].astype(x.dtype))
+
+    # un-sort: gather back and weighted scatter-add into tokens
+    y_flat = y.reshape(e * cap, d)[dest] * jnp.where(keep, sg, 0)[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[st].add(y_flat)
+    return out.reshape(b, s, d)

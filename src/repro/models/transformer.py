@@ -1,0 +1,410 @@
+"""Config-driven decoder assembly for every assigned architecture family.
+
+Parameters are a plain pytree with per-layer leaves STACKED on a leading
+``n_layers`` axis and the forward pass is a ``lax.scan`` over layers —
+this keeps the HLO (and hence GSPMD partitioning time and program size)
+independent of depth, which is what makes 94-layer × 512-device dry-run
+compiles tractable. ``remat='full'`` wraps the scanned layer body in
+``jax.checkpoint(nothing_saveable)`` (activation recompute in backward).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import (_constrain, gqa_decode, gqa_train, mla_decode,
+                        mla_train)
+from .layers import cross_entropy_chunked, rms_norm, swiglu
+from .mamba import mamba_mixer_decode, mamba_mixer_train
+from .moe import moe_ffn
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _layer_shapes(cfg: ArchConfig) -> dict:
+    """Per-layer parameter shapes (without the stacked L axis)."""
+    d = cfg.d_model
+    s: dict = {"ln1": (d,)}
+    if cfg.family != "ssm":
+        h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        if cfg.mla is not None:
+            m = cfg.mla
+            s["attn"] = {
+                "w_dq": (d, m.q_lora_rank),
+                "w_uq": (m.q_lora_rank, h * (m.nope_dim + m.rope_dim)),
+                "w_dkv": (d, m.kv_lora_rank),
+                "w_kr": (d, m.rope_dim),
+                "w_ukv": (m.kv_lora_rank, h * (m.nope_dim + m.v_dim)),
+                "wo": (h * m.v_dim, d),
+            }
+        else:
+            s["attn"] = {"wq": (d, h * dh), "wk": (d, kv * dh),
+                         "wv": (d, kv * dh), "wo": (h * dh, d)}
+            if cfg.qkv_bias:
+                s["attn"].update({"bq": (h * dh,), "bk": (kv * dh,),
+                                  "bv": (kv * dh,)})
+    if cfg.family in ("ssm", "hybrid"):
+        m = cfg.ssm
+        gn = m.n_groups * m.d_state
+        conv_ch = m.d_inner + 2 * gn
+        s["mamba"] = {
+            # z + xBC fused (16-divisible); dt separate (n_heads may be odd)
+            "in_proj": (d, 2 * m.d_inner + 2 * gn),
+            "dt_proj": (d, m.n_heads),
+            "conv_w": (m.conv_width, conv_ch),
+            "dt_bias": (m.n_heads,),
+            "A_log": (m.n_heads,),
+            "D": (m.n_heads,),
+            "out_norm": (m.d_inner,),
+            "out_proj": (m.d_inner, d),
+        }
+    if cfg.family == "hybrid":
+        s["mix_na"] = (d,)
+        s["mix_nm"] = (d,)
+    if cfg.d_ff:
+        s["ln2"] = (d,)
+        if cfg.family == "moe":
+            s["moe"] = {"router": (d, cfg.n_experts),
+                        "w_gate": (cfg.n_experts, d, cfg.d_ff),
+                        "w_up": (cfg.n_experts, d, cfg.d_ff),
+                        "w_down": (cfg.n_experts, cfg.d_ff, d)}
+        else:
+            s["mlp"] = {"w_gate": (d, cfg.d_ff), "w_up": (d, cfg.d_ff),
+                        "w_down": (cfg.d_ff, d)}
+    return s
+
+
+_FP32_LEAVES = ("A_log", "dt_bias", "D")
+_ONES_LEAVES = ("ln1", "ln2", "out_norm", "mix_na", "mix_nm")
+
+
+def param_shapes(cfg: ArchConfig) -> dict:
+    """Full-model parameter shape tree (stacked layers)."""
+    layer = jax.tree.map(lambda shp: (cfg.n_layers, *shp),
+                         _layer_shapes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    tree = {"embed": (cfg.padded_vocab, cfg.d_model), "layers": layer,
+            "final_norm": (cfg.d_model,)}
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (cfg.d_model, cfg.padded_vocab)
+    return tree
+
+
+def _leaf_dtype(path: str, cfg: ArchConfig):
+    name = path.split("/")[-1]
+    if name in _FP32_LEAVES:
+        return jnp.float32
+    return cfg.compute_dtype
+
+
+def _flatten_with_path(tree, prefix=""):
+    out = []
+    for k, v in tree.items():
+        p = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out += _flatten_with_path(v, p)
+        else:
+            out.append((p, v))
+    return out
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    """Materialise parameters (smoke/reduced scale; full scale goes
+    through jax.eval_shape(init_params, ...) only)."""
+    shapes = param_shapes(cfg)
+    flat = _flatten_with_path(shapes)
+    keys = jax.random.split(key, len(flat))
+
+    def make(path, shape, k):
+        name = path.split("/")[-1]
+        dt = _leaf_dtype(path, cfg)
+        if name in _ONES_LEAVES or name == "final_norm":
+            return jnp.ones(shape, dt)
+        if name == "A_log":
+            return jnp.log(jnp.linspace(1.0, 16.0, shape[-1]) *
+                           jnp.ones(shape, jnp.float32))
+        if name == "dt_bias":
+            return jnp.full(shape, -4.6, jnp.float32)   # softplus^-1(0.01)
+        if name == "D":
+            return jnp.ones(shape, jnp.float32)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = 0.02 if name in ("embed", "lm_head") else fan_in ** -0.5
+        return (jax.random.normal(k, shape, jnp.float32) * std).astype(dt)
+
+    leaves = {p: make(p, shp, k) for (p, shp), k in zip(flat, keys)}
+
+    def rebuild(tree, prefix=""):
+        out = {}
+        for k, v in tree.items():
+            p = f"{prefix}/{k}" if prefix else k
+            out[k] = rebuild(v, p) if isinstance(v, dict) else leaves[p]
+        return out
+
+    return rebuild(shapes)
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+
+def _layer_train(x, lp, cfg: ArchConfig, positions):
+    if cfg.batch_2d:
+        # pin activations to 2D batch sharding; without the constraint
+        # GSPMD propagates the params' 'model' dim instead and un-shards
+        # the batch (measured: involuntary full rematerialization)
+        x = _constrain(x, ("data", "model"), None, None)
+    h = rms_norm(x, lp["ln1"])
+    if cfg.family == "ssm":
+        x = x + mamba_mixer_train(h, lp["mamba"], cfg)
+    elif cfg.family == "hybrid":
+        attn_out = gqa_train(h, lp["attn"], cfg, positions)
+        mamba_out = mamba_mixer_train(h, lp["mamba"], cfg)
+        x = x + 0.5 * (rms_norm(attn_out, lp["mix_na"]) +
+                       rms_norm(mamba_out, lp["mix_nm"]))
+    elif cfg.mla is not None:
+        x = x + mla_train(h, lp["attn"], cfg, positions)
+    else:
+        x = x + gqa_train(h, lp["attn"], cfg, positions)
+    if cfg.d_ff:
+        h2 = rms_norm(x, lp["ln2"])
+        if cfg.family == "moe":
+            x = x + moe_ffn(h2, lp["moe"], cfg)
+        else:
+            x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                           lp["mlp"]["w_down"])
+    return x
+
+
+def forward(params, tokens, cfg: ArchConfig, vision_embeds=None):
+    """tokens: (B, S) int32 -> final hidden states (B, S, D)."""
+    b, s = tokens.shape
+    dt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if vision_embeds is not None and cfg.n_vision_tokens:
+        nv = cfg.n_vision_tokens
+        vis = jnp.pad(vision_embeds.astype(dt),
+                      ((0, 0), (0, s - nv), (0, 0)))
+        keep = (jnp.arange(s) < nv)[None, :, None]
+        x = jnp.where(keep, vis, x)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    layer = functools.partial(_layer_train, cfg=cfg, positions=positions)
+    if cfg.remat == "full":
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.unroll_layers:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x = layer(x, lp)
+    else:
+        def body(h, lp):
+            return layer(h, lp), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["final_norm"])
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    h = forward(params, batch["tokens"], cfg,
+                vision_embeds=batch.get("vision_embeds"))
+    lm_head = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"])
+    return cross_entropy_chunked(h, lm_head, batch["labels"],
+                                 chunk=cfg.loss_chunk,
+                                 mask=batch.get("loss_mask"),
+                                 unroll=cfg.unroll_chunks)
+
+
+# ---------------------------------------------------------------------------
+# prefill (serving: populate the cache in one parallel pass)
+# ---------------------------------------------------------------------------
+
+
+def _layer_prefill(x, lp, cfg: ArchConfig, positions):
+    cache = {}
+    h = rms_norm(x, lp["ln1"])
+    if cfg.family == "ssm":
+        out, st, cv = mamba_mixer_train(h, lp["mamba"], cfg,
+                                        return_state=True)
+        x = x + out
+        cache.update(ssm=st, conv=cv)
+    elif cfg.family == "hybrid":
+        attn_out, k, v = gqa_train(h, lp["attn"], cfg, positions,
+                                   return_kv=True)
+        mamba_out, st, cv = mamba_mixer_train(h, lp["mamba"], cfg,
+                                              return_state=True)
+        x = x + 0.5 * (rms_norm(attn_out, lp["mix_na"]) +
+                       rms_norm(mamba_out, lp["mix_nm"]))
+        cache.update(k=k, v=v, ssm=st, conv=cv)
+    elif cfg.mla is not None:
+        out, kvc, kpe = mla_train(h, lp["attn"], cfg, positions,
+                                  return_kv=True)
+        x = x + out
+        cache.update(kvc=kvc, kpe=kpe)
+    else:
+        out, k, v = gqa_train(h, lp["attn"], cfg, positions, return_kv=True)
+        x = x + out
+        if cfg.kv_cache_dtype == "int8":
+            from .attention import quantize_kv
+            k_q, k_s = quantize_kv(k)
+            v_q, v_s = quantize_kv(v)
+            cache.update(k=k_q, v=v_q, k_scale=k_s, v_scale=v_s)
+        else:
+            cache.update(k=k, v=v)
+    if cfg.d_ff:
+        h2 = rms_norm(x, lp["ln2"])
+        if cfg.family == "moe":
+            x = x + moe_ffn(h2, lp["moe"], cfg)
+        else:
+            x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                           lp["mlp"]["w_down"])
+    return x, cache
+
+
+def prefill_forward(params, tokens, cfg: ArchConfig, vision_embeds=None):
+    """Parallel prefill: (B, S) tokens -> (last-token logits (B, 1, V),
+    stacked per-layer cache covering positions [0, S))."""
+    b, s = tokens.shape
+    dt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if vision_embeds is not None and cfg.n_vision_tokens:
+        nv = cfg.n_vision_tokens
+        vis = jnp.pad(vision_embeds.astype(dt), ((0, 0), (0, s - nv), (0, 0)))
+        keep = (jnp.arange(s) < nv)[None, :, None]
+        x = jnp.where(keep, vis, x)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    layer = functools.partial(_layer_prefill, cfg=cfg, positions=positions)
+    if cfg.remat == "full":
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.unroll_layers:
+        caches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, c = layer(x, lp)
+            caches.append(c)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    else:
+        x, cache = jax.lax.scan(lambda h, lp: layer(h, lp), x,
+                                params["layers"])
+    h = rms_norm(x[:, -1:], params["final_norm"])
+    lm_head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", h, lm_head.astype(dt))
+    return logits.astype(jnp.float32), cache
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Per-layer decode cache, stacked on L. Attention archs: KV (or MLA
+    latent) cache; ssm archs: (H, N, P) recurrent state + conv ring."""
+    L = cfg.n_layers
+    dt = cfg.compute_dtype
+    cache: dict = {}
+    if cfg.family != "ssm":
+        if cfg.mla is not None:
+            m = cfg.mla
+            cache["kvc"] = jnp.zeros((L, batch, max_len, m.kv_lora_rank), dt)
+            cache["kpe"] = jnp.zeros((L, batch, max_len, m.rope_dim), dt)
+        else:
+            kv, dh = cfg.n_kv_heads, cfg.head_dim
+            if cfg.kv_cache_dtype == "int8":
+                cache["k"] = jnp.zeros((L, batch, max_len, kv, dh),
+                                       jnp.int8)
+                cache["v"] = jnp.zeros((L, batch, max_len, kv, dh),
+                                       jnp.int8)
+                cache["k_scale"] = jnp.zeros((L, batch, max_len, kv),
+                                             jnp.float32)
+                cache["v_scale"] = jnp.zeros((L, batch, max_len, kv),
+                                             jnp.float32)
+            else:
+                cache["k"] = jnp.zeros((L, batch, max_len, kv, dh), dt)
+                cache["v"] = jnp.zeros((L, batch, max_len, kv, dh), dt)
+    if cfg.family in ("ssm", "hybrid"):
+        m = cfg.ssm
+        cache["ssm"] = jnp.zeros((L, batch, m.n_heads, m.d_state,
+                                  m.head_dim), jnp.float32)
+        cache["conv"] = jnp.zeros((L, batch, m.conv_width - 1,
+                                   m.d_inner + 2 * m.n_groups * m.d_state),
+                                  dt)
+    return cache
+
+
+def _layer_decode(x, lp, cl, cfg: ArchConfig, pos):
+    new_cache = dict(cl)
+    h = rms_norm(x, lp["ln1"])
+    if cfg.family == "ssm":
+        out, st, cv = mamba_mixer_decode(h, lp["mamba"], cfg,
+                                         cl["ssm"], cl["conv"])
+        x = x + out
+        new_cache.update(ssm=st, conv=cv)
+    elif cfg.family == "hybrid":
+        attn_out, k, v = gqa_decode(h, lp["attn"], cfg, cl["k"], cl["v"], pos)
+        mamba_out, st, cv = mamba_mixer_decode(h, lp["mamba"], cfg,
+                                               cl["ssm"], cl["conv"])
+        x = x + 0.5 * (rms_norm(attn_out, lp["mix_na"]) +
+                       rms_norm(mamba_out, lp["mix_nm"]))
+        new_cache.update(k=k, v=v, ssm=st, conv=cv)
+    elif cfg.mla is not None:
+        out, kvc, kpe = mla_decode(h, lp["attn"], cfg, cl["kvc"],
+                                   cl["kpe"], pos)
+        x = x + out
+        new_cache.update(kvc=kvc, kpe=kpe)
+    else:
+        if cfg.kv_cache_dtype == "int8":
+            out, k, v, (ks, vs) = gqa_decode(
+                h, lp["attn"], cfg, cl["k"], cl["v"], pos,
+                cache_scales=(cl["k_scale"], cl["v_scale"]))
+            new_cache.update(k=k, v=v, k_scale=ks, v_scale=vs)
+        else:
+            out, k, v = gqa_decode(h, lp["attn"], cfg, cl["k"], cl["v"],
+                                   pos)
+            new_cache.update(k=k, v=v)
+        x = x + out
+    if cfg.d_ff:
+        h2 = rms_norm(x, lp["ln2"])
+        if cfg.family == "moe":
+            x = x + moe_ffn(h2, lp["moe"], cfg)
+        else:
+            x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                           lp["mlp"]["w_down"])
+    return x, new_cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """One serving step: tokens (B, 1) + cache at position ``pos`` ->
+    (logits (B, 1, V), new cache)."""
+    dt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    if cfg.unroll_layers:
+        new_caches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            cl = jax.tree.map(lambda a: a[i], cache)
+            x, ncl = _layer_decode(x, lp, cl, cfg, pos)
+            new_caches.append(ncl)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+    else:
+        def body(h, xs):
+            lp, cl = xs
+            h, ncl = _layer_decode(h, lp, cl, cfg, pos)
+            return h, ncl
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    h = rms_norm(x, params["final_norm"])
+    lm_head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", h, lm_head.astype(dt))
+    return logits.astype(jnp.float32), new_cache

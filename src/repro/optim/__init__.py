@@ -1,0 +1,5 @@
+"""Optimizers + schedules + gradient compression."""
+from .adamw import AdamWConfig, adamw_update, cosine_lr, global_norm, init_moments
+
+__all__ = ["AdamWConfig", "adamw_update", "cosine_lr", "global_norm",
+           "init_moments"]

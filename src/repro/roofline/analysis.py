@@ -1,0 +1,160 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs    / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes    / (chips * HBM_BW)
+  collective = coll_bytes   / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+Collective bytes are NOT in cost_analysis: we parse the (per-device,
+post-SPMD) HLO text and sum the result-shape bytes of every collective
+op, then multiply by the chip count to get the global figure the
+formula above divides back down.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"^\s*\S+\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_per_device(hlo_text: str) -> dict:
+    """Sum result bytes of collective ops in a per-device HLO module.
+    '-done' ops are skipped so async pairs aren't double counted."""
+    per_op: dict[str, int] = {k: 0 for k in _COLL_OPS}
+    counts: dict[str, int] = {k: 0 for k in _COLL_OPS}
+    for m in _LINE_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        per_op[op] += _shape_bytes(shape_str)
+        counts[op] += 1
+    return {"bytes": per_op, "counts": counts,
+            "total": sum(per_op.values())}
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """6*N*D (train) / 2*N*D (inference) with MoE active-param scaling."""
+    from ..models.transformer import param_shapes
+
+    def leaf_count(tree, prefix=""):
+        total = 0.0
+        for k, v in tree.items():
+            p = f"{prefix}/{k}" if prefix else k
+            if isinstance(v, dict):
+                total += leaf_count(v, p)
+            else:
+                n = 1
+                for d in v:
+                    n *= d
+                name = p.split("/")[-1]
+                if "moe" in p.split("/") and name != "router":
+                    n *= cfg.moe_top_k / cfg.n_experts   # active fraction
+                if name in ("embed",):
+                    n = 0                                 # lookup, not matmul
+                total += n
+        return total
+
+    n_active = leaf_count(param_shapes(cfg))
+    tokens = batch * seq if kind in ("train", "prefill") else batch
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def roofline(cost: dict, coll_total_per_dev: int, chips: int,
+             cfg=None, kind: Optional[str] = None,
+             batch: int = 0, seq: int = 0) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    # cost_analysis of the SPMD-partitioned module is per-device.
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll_total_per_dev / ICI_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+    out = {
+        "per_device_flops": flops,
+        "per_device_bytes": byts,
+        "per_device_collective_bytes": float(coll_total_per_dev),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "chips": chips,
+    }
+    if cfg is not None and kind is not None:
+        mf = model_flops(cfg, kind, batch, seq)
+        out["model_flops_total"] = mf
+        out["model_flops_per_device"] = mf / chips
+        out["useful_flops_ratio"] = (mf / chips) / flops if flops else 0.0
+        # roofline fraction: useful work / time implied by dominant term
+        t_star = max(t_compute, t_memory, t_coll)
+        out["roofline_fraction"] = ((mf / chips) / PEAK_FLOPS) / t_star \
+            if t_star > 0 else 0.0
+    return out
+
+
+# --------------------------------------------------------------------------
+# HLO-text cost model (fallback for programs whose compute lives in called
+# computations that HloCostAnalysis does not traverse — observed for the
+# shard_map K-means fit on the CPU backend; LLM cells don't need this).
+# --------------------------------------------------------------------------
+
+_OP_RE = re.compile(r"^\s*%\S+ = ([a-z0-9]+\[[0-9,]*\])[^\n]*? ([a-z0-9-]+)\(",
+                    re.M)
+_DOT_RE = re.compile(r"^\s*%\S+ = ([a-z0-9]+\[[0-9,]*\])[^\n]*? dot\(",
+                     re.M)
+
+
+def hlo_dot_flops(txt: str, contraction: int) -> float:
+    """Sum 2*|out|*contraction over dot ops (caller supplies the known
+    contraction size, e.g. the K-means feature dim)."""
+    total = 0.0
+    for m in _DOT_RE.finditer(txt):
+        total += 2.0 * _shape_bytes(m.group(1)) / 4.0 * contraction
+    return total
+
+
+def hlo_traffic_bytes(txt: str, min_bytes: int = 1 << 20) -> float:
+    """Approximate HBM traffic: 2x (write+read) the output bytes of every
+    op larger than ``min_bytes`` in the optimized HLO (each listed op of
+    the post-fusion module materialises its output once)."""
+    total = 0.0
+    for m in _OP_RE.finditer(txt):
+        b = _shape_bytes(m.group(1))
+        if b >= min_bytes and m.group(2) != "parameter":
+            total += 2.0 * b
+    return total

@@ -1,0 +1,7 @@
+"""Fault-tolerant runtime."""
+from .fault_tolerance import (ElasticController, FailureInjector,
+                              InjectedFailure, ResilientLoop,
+                              StragglerWatchdog)
+
+__all__ = ["ResilientLoop", "FailureInjector", "InjectedFailure",
+           "StragglerWatchdog", "ElasticController"]

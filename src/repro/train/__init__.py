@@ -1,0 +1,6 @@
+"""Training/serving step functions."""
+from .steps import (TrainState, init_train_state, make_prefill_step,
+                    make_serve_step, make_train_step)
+
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,57 @@
+"""Step functions: train / prefill / decode — the units the launcher jits.
+
+All three are pure (state, batch) -> (state, out) functions built from a
+config; distribution comes entirely from jit in_shardings/out_shardings
+(GSPMD), so the same step runs on 1 chip or 512.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import decode_step, init_params, loss_fn, prefill_forward
+from ..optim.adamw import AdamWConfig, adamw_update, init_moments
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: dict
+    m: dict
+    v: dict
+
+
+def init_train_state(key: jax.Array, cfg: ArchConfig) -> TrainState:
+    params = init_params(key, cfg)
+    m, v = init_moments(params)
+    return TrainState(jnp.int32(0), params, m, v)
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig = AdamWConfig()):
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch, cfg)
+        new_p, new_m, new_v, metrics = adamw_update(
+            grads, state.m, state.v, state.params, state.step, opt)
+        metrics["loss"] = loss
+        return TrainState(state.step + 1, new_p, new_m, new_v), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params: dict, batch: dict):
+        return prefill_forward(params, batch["tokens"], cfg,
+                               vision_embeds=batch.get("vision_embeds"))
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params: dict, cache: dict, tokens: jnp.ndarray,
+                   pos: jnp.ndarray):
+        return decode_step(params, cache, tokens, pos, cfg)
+
+    return serve_step

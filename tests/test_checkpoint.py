@@ -1,0 +1,68 @@
+"""Checkpoint roundtrip, atomicity, async save, elastic restore."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def _state(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(key, (8, 16)),
+                       "b": jnp.zeros((16,))},
+            "step": jnp.int32(7)}
+
+
+def test_roundtrip(tmp_path):
+    state = _state()
+    save_checkpoint(tmp_path, 7, state)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+    restored, step = restore_checkpoint(tmp_path, like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_pointer_tracks_newest(tmp_path):
+    save_checkpoint(tmp_path, 1, _state(1))
+    save_checkpoint(tmp_path, 5, _state(2))
+    assert latest_step(tmp_path) == 5
+    restored, step = restore_checkpoint(
+        tmp_path, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), _state()))
+    assert step == 5
+
+
+def test_async_save_completes(tmp_path):
+    t = save_checkpoint(tmp_path, 3, _state(), async_=True)
+    t.join()
+    assert latest_step(tmp_path) == 3
+
+
+def test_corrupt_tmp_dir_never_published(tmp_path):
+    save_checkpoint(tmp_path, 2, _state())
+    # leftover tmp dirs (simulating a crash mid-save) are invisible
+    (tmp_path / ".tmp_step_000009_123").mkdir()
+    assert latest_step(tmp_path) == 2
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(tmp_path, 1, _state())
+    bad_like = {"params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                           "b": jax.ShapeDtypeStruct((16,), jnp.float32)},
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    try:
+        restore_checkpoint(tmp_path, bad_like)
+        assert False, "should have raised"
+    except ValueError:
+        pass
+
+
+def test_manifest_records_structure(tmp_path):
+    save_checkpoint(tmp_path, 4, _state())
+    man = json.loads((tmp_path / "step_000004" / "manifest.json").read_text())
+    assert man["step"] == 4
+    assert len(man["leaves"]) == 3

@@ -1,0 +1,151 @@
+"""Distributed behaviour on a multi-device (forced 8-CPU) runtime.
+
+jax locks the device count at first init, so these tests run in
+subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(body: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    script = textwrap.dedent(body)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, f"STDOUT:{out.stdout}\nSTDERR:{out.stderr}"
+    return out.stdout
+
+
+def test_distributed_kmeans_matches_single_device():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import yinyang, distributed_yinyang, kmeans_plusplus
+        from repro.data import make_points
+        pts_np, _, _ = make_points(4096, 16, 24, seed=0)
+        pts = jnp.asarray(pts_np)
+        init = kmeans_plusplus(jax.random.PRNGKey(1), pts, 24)
+        mesh = jax.make_mesh((8,), ("data",))
+        r_d = distributed_yinyang(pts, init, mesh, axes=("data",),
+                                  max_iters=40, tol=1e-5)
+        r_s = yinyang(pts, init, max_iters=40, tol=1e-5)
+        np.testing.assert_allclose(np.asarray(r_d.centroids),
+                                   np.asarray(r_s.centroids), atol=1e-3)
+        np.testing.assert_allclose(float(r_d.inertia), float(r_s.inertia),
+                                   rtol=1e-4)
+        print("DIST-KMEANS-OK")
+    """)
+
+
+def test_distributed_kmeans_compressed_psum_converges():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import distributed_yinyang, yinyang, kmeans_plusplus
+        from repro.data import make_points
+        pts_np, _, _ = make_points(4096, 8, 16, seed=2)
+        pts = jnp.asarray(pts_np)
+        init = kmeans_plusplus(jax.random.PRNGKey(1), pts, 16)
+        mesh = jax.make_mesh((8,), ("data",))
+        r_c = distributed_yinyang(pts, init, mesh, compress=True,
+                                  max_iters=40, tol=1e-5)
+        r_s = yinyang(pts, init, max_iters=40, tol=1e-5)
+        # int8 psum is approximate: inertia within 1%
+        assert abs(float(r_c.inertia) - float(r_s.inertia)) \
+            <= 0.01 * float(r_s.inertia)
+        print("COMPRESSED-OK")
+    """)
+
+
+def test_sharded_train_step_runs_and_matches_unsharded():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.train.steps import init_train_state, make_train_step
+        from repro.launch.sharding import (train_state_pspecs, batch_pspecs,
+                                           named)
+        cfg = get_config("qwen2-7b").reduced()
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        step = make_train_step(cfg)
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                              (8, 32), 0, cfg.vocab),
+                 "labels": jax.random.randint(jax.random.PRNGKey(2),
+                                              (8, 32), 0, cfg.vocab)}
+        # unsharded reference
+        _, m_ref = jax.jit(step)(state, batch)
+        with mesh:
+            st_sh = named(mesh, train_state_pspecs(cfg))
+            b_sh = named(mesh, batch_pspecs(cfg, mesh))
+            state_s = jax.device_put(state, st_sh)
+            batch_s = jax.device_put(batch, b_sh)
+            _, m_sh = jax.jit(step, in_shardings=(st_sh, b_sh),
+                              out_shardings=(st_sh, None))(state_s, batch_s)
+        np.testing.assert_allclose(float(m_ref["loss"]),
+                                   float(m_sh["loss"]), rtol=2e-3)
+        print("SHARDED-TRAIN-OK")
+    """)
+
+
+def test_elastic_restore_to_different_mesh():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.train.steps import init_train_state
+        from repro.launch.sharding import train_state_pspecs, named
+        from repro.checkpoint import save_checkpoint, restore_checkpoint
+        import tempfile
+        cfg = get_config("phi4-mini-3.8b").reduced()
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        mesh_a = jax.make_mesh((8, 1), ("data", "model"))
+        mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+        with tempfile.TemporaryDirectory() as d:
+            state_a = jax.device_put(state, named(mesh_a,
+                                                  train_state_pspecs(cfg)))
+            save_checkpoint(d, 1, state_a)
+            like = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            restored, step = restore_checkpoint(
+                d, like, shardings=named(mesh_b, train_state_pspecs(cfg)))
+            for a, b in zip(jax.tree.leaves(state_a),
+                            jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("ELASTIC-OK")
+    """)
+
+
+def test_reduced_dryrun_lowers_on_8_devices():
+    """The dry-run machinery itself (lower+compile+cost) on a reduced
+    config and a small mesh — fast proxy for the production sweep."""
+    _run("""
+        import jax
+        from repro.configs import get_config
+        from repro.launch.sharding import (train_state_pspecs, batch_pspecs,
+                                           named)
+        from repro.train.steps import make_train_step, init_train_state
+        import functools, jax.numpy as jnp
+        cfg = get_config("hymba-1.5b").reduced()
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        step = make_train_step(cfg)
+        state = jax.eval_shape(functools.partial(init_train_state, cfg=cfg),
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(named(mesh, train_state_pspecs(cfg)),
+                              named(mesh, batch_pspecs(cfg, mesh))),
+                out_shardings=(named(mesh, train_state_pspecs(cfg)), None),
+            ).lower(state, batch)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            assert cost.get("flops", 0) > 0
+        print("DRYRUN-8DEV-OK")
+    """)

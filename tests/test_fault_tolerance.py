@@ -1,0 +1,94 @@
+"""Fault tolerance: restart-on-failure, determinism of replay,
+straggler detection, end-to-end training driver."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import TokenPipeline
+from repro.runtime import (FailureInjector, InjectedFailure, ResilientLoop,
+                           StragglerWatchdog)
+from repro.train.steps import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    step_fn = jax.jit(make_train_step(cfg))
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    pipeline = TokenPipeline(cfg, batch=2, seq=32, seed=0)
+    return cfg, step_fn, state, pipeline
+
+
+def _run(tmp_path, step_fn, state, pipeline, n, fail_at=()):
+    loop = ResilientLoop(step_fn, pipeline, tmp_path, ckpt_every=4,
+                         injector=FailureInjector(fail_at),
+                         async_ckpt=False)
+    final = loop.run(state, n)
+    return loop, final
+
+
+def test_failure_recovery_reaches_end(tmp_path, tiny_setup):
+    cfg, step_fn, state, pipeline = tiny_setup
+    loop, final = _run(tmp_path / "a", step_fn, state, pipeline, 12,
+                       fail_at=(6, 9))
+    assert loop.restarts == 2
+    assert int(jax.device_get(final.step)) == 12
+
+
+def test_recovery_is_bitwise_deterministic(tmp_path, tiny_setup):
+    """Replay-after-failure must produce the same final params as a
+    clean run (deterministic (seed, step) data + checkpointed state)."""
+    cfg, step_fn, state, pipeline = tiny_setup
+    _, clean = _run(tmp_path / "clean", step_fn, state, pipeline, 10)
+    _, failed = _run(tmp_path / "failed", step_fn, state, pipeline, 10,
+                     fail_at=(7,))
+    for a, b in zip(jax.tree.leaves(clean.params),
+                    jax.tree.leaves(failed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_too_many_failures_raises(tmp_path, tiny_setup):
+    cfg, step_fn, state, pipeline = tiny_setup
+    loop = ResilientLoop(step_fn, pipeline, tmp_path / "b", ckpt_every=4,
+                         injector=FailureInjector((3, 3)), max_restarts=0,
+                         async_ckpt=False)
+    # the same step fails again after restart -> exhausts budget
+    loop.injector.seen = set()
+    with pytest.raises(InjectedFailure):
+        loop.run(state, 8)
+        loop.injector.seen = set()
+        loop.run(state, 8)
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    wd = StragglerWatchdog(threshold=2.0)
+    flags = [wd.observe(i, dt) for i, dt in
+             enumerate([1.0, 1.1, 0.9, 5.0, 1.0, 1.05])]
+    assert flags == [False, False, False, True, False, False]
+    assert len(wd.events) == 1 and wd.events[0]["step"] == 3
+    # EWMA not polluted by the straggler
+    assert wd.ewma < 1.2
+
+
+def test_loss_decreases_on_learnable_data(tmp_path):
+    """End-to-end: a tiny model on a learnable bigram corpus must
+    actually learn (loss drops materially)."""
+    cfg = get_config("musicgen-medium").reduced()
+    rng = np.random.default_rng(0)
+    # deterministic cycle corpus: token t -> (t*7+3) % vocab
+    seq = [0]
+    for _ in range(20000):
+        seq.append((seq[-1] * 7 + 3) % cfg.vocab)
+    corpus = np.asarray(seq, dtype=np.int32)
+    pipeline = TokenPipeline(cfg, batch=4, seq=64, seed=0, corpus=corpus)
+    from repro.optim.adamw import AdamWConfig
+    opt = AdamWConfig(lr_peak=1e-3, warmup_steps=10, decay_steps=80)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    state = init_train_state(jax.random.PRNGKey(1), cfg)
+    loop = ResilientLoop(step_fn, pipeline, tmp_path / "lrn",
+                         ckpt_every=1000, async_ckpt=False)
+    loop.run(state, 80)
+    losses = [m["loss"] for m in loop.metrics_log]
+    assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:5])

@@ -1,0 +1,131 @@
+"""Hypothesis property tests for the system's invariants.
+
+The safety property of the whole paper: the triangle-inequality bounds
+are SOUND at every iteration (ub is a true upper bound on the assigned
+distance, lb a true lower bound per group), and therefore filtering is
+exact — filtered assignments always equal Lloyd's on arbitrary inputs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lloyd, yinyang
+from repro.core.distances import pairwise_dists
+from repro.core.kmeans import (_filtered_step, _init_filter_state,
+                               group_centroids)
+
+
+def _random_problem(seed, n, d, k):
+    key = jax.random.PRNGKey(seed)
+    kp, kc = jax.random.split(key)
+    pts = jax.random.normal(kp, (n, d)) * 3.0
+    init = pts[jax.random.choice(kc, n, (k,), replace=False)]
+    return pts, init
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.integers(20, 300),
+       d=st.integers(1, 24),
+       k=st.integers(2, 12),
+       g=st.integers(1, 6))
+def test_filtered_equals_lloyd_on_arbitrary_data(seed, n, d, k, g):
+    k = min(k, n // 2)
+    g = min(g, k)
+    pts, init = _random_problem(seed, n, d, k)
+    r_l = lloyd(pts, init, max_iters=25, tol=1e-6)
+    r_f = yinyang(pts, init, n_groups=g, max_iters=25, tol=1e-6)
+    a_l = np.asarray(r_l.assignments)
+    a_f = np.asarray(r_f.assignments)
+    if (a_l == a_f).all():
+        return
+    # Exactness modulo fp ties: divergent trajectories are only legal
+    # via near-ties; both must reach (numerically) equal-quality fixed
+    # points, and the filtered assignment must be optimal w.r.t. its
+    # own centroids (ties cannot make it pick a WORSE centroid).
+    np.testing.assert_allclose(float(r_l.inertia), float(r_f.inertia),
+                               rtol=1e-4)
+    pts64 = np.asarray(pts, np.float64)
+    c64 = np.asarray(r_f.centroids, np.float64)
+    d_f = np.sqrt(((pts64[:, None, :] - c64[None]) ** 2).sum(-1))
+    rows = np.arange(len(a_f))
+    assert (d_f[rows, a_f] <= d_f.min(axis=1) + 1e-4).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.integers(30, 200),
+       d=st.integers(2, 16),
+       k=st.integers(4, 10),
+       iters=st.integers(1, 6))
+def test_bounds_remain_sound_across_iterations(seed, n, d, k, iters):
+    """After any number of filtered steps: ub >= d(x, a(x)) and
+    lb[x, g] <= min_{c in g, c != a(x)} d(x, c)."""
+    g = max(k // 3, 1)
+    pts, init = _random_problem(seed, n, d, k)
+    groups = group_centroids(init.astype(jnp.float32), g)
+    state = _init_filter_state(pts, init.astype(jnp.float32), groups, g)
+    for _ in range(iters):
+        state = _filtered_step(pts, state, groups, g, k)
+
+    # float64 diff-form oracle: the expanded-form fp32 distance has
+    # cancellation error ~1e-3 at small distances (false violations)
+    pts64 = np.asarray(pts, np.float64)
+    c64 = np.asarray(state.centroids, np.float64)
+    d_all = np.sqrt(((pts64[:, None, :] - c64[None]) ** 2).sum(-1))
+    a = np.asarray(state.assignments)
+    ub = np.asarray(state.ub)
+    lb = np.asarray(state.lb)
+    rows = np.arange(n)
+    # ub soundness
+    assert (ub + 1e-3 >= d_all[rows, a]).all()  # 1e-3: fp32 headroom
+    # lb soundness per group (excluding the assigned centroid)
+    gid = np.asarray(groups)
+    for gg in range(g):
+        cols = np.nonzero(gid == gg)[0]
+        if len(cols) == 0:
+            continue
+        dg = d_all[:, cols].copy()
+        for i in rows:
+            if gid[a[i]] == gg:
+                dg[i, list(cols).index(a[i])] = np.inf
+        true_min = dg.min(axis=1)
+        assert (lb[:, gg] <= true_min + 1e-3).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(10, 400),
+       frac=st.floats(0.0, 1.0))
+def test_compaction_preserves_set(seed, n, frac):
+    from repro.kernels import compact_indices
+    key = jax.random.PRNGKey(seed)
+    mask = jax.random.bernoulli(key, frac, (n,))
+    idx, valid, count = compact_indices(mask, capacity=n)
+    ref = set(np.nonzero(np.asarray(mask))[0].tolist())
+    got = set(np.asarray(idx)[:int(count)].tolist())
+    assert got == ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_quantized_psum_error_feedback_converges(seed):
+    """Error feedback: repeated compress->feedback cycles of the same
+    tensor keep the CUMULATIVE error bounded (no drift)."""
+    from repro.optim.compression import quantize_int8, dequantize_int8
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (64,)) * 10
+    residual = jnp.zeros_like(x)
+    total_in, total_out = jnp.zeros_like(x), jnp.zeros_like(x)
+    for _ in range(20):
+        target = x + residual
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s)
+        residual = target - deq
+        total_in = total_in + x
+        total_out = total_out + deq
+    # cumulative transmitted value tracks cumulative true value within
+    # one quantisation step (error feedback property)
+    err = np.abs(np.asarray(total_out - total_in)).max()
+    step = float(jnp.max(jnp.abs(x + residual)) / 127.0)
+    assert err <= 2 * step + 1e-5

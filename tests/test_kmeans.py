@@ -1,0 +1,109 @@
+"""Core K-means behaviour: exactness of the multi-level filters.
+
+The central claim of the paper's algorithm layer: the triangle-
+inequality filters NEVER change the result — only the work. So filtered
+K-means must match Lloyd bit-for-bit (same assignments, same centroids)
+while doing strictly fewer distance evaluations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KMeans, group_centroids, kmeans_plusplus, lloyd,
+                        random_init, yinyang)
+from repro.data import make_points
+
+
+def _dataset(n=3000, d=12, k=16, seed=0):
+    pts, _, _ = make_points(n, d, k, seed=seed)
+    init = kmeans_plusplus(jax.random.PRNGKey(seed + 1), jnp.asarray(pts), k)
+    return jnp.asarray(pts), init, k
+
+
+@pytest.mark.parametrize("n_groups", [1, 4, None])
+def test_filtered_matches_lloyd_exactly(n_groups):
+    pts, init, k = _dataset()
+    r_l = lloyd(pts, init, max_iters=50, tol=1e-5)
+    r_f = yinyang(pts, init, n_groups=n_groups, max_iters=50, tol=1e-5)
+    assert int(r_l.n_iters) == int(r_f.n_iters)
+    np.testing.assert_array_equal(np.asarray(r_l.assignments),
+                                  np.asarray(r_f.assignments))
+    np.testing.assert_allclose(np.asarray(r_l.centroids),
+                               np.asarray(r_f.centroids), atol=1e-4)
+
+
+def test_filters_reduce_work():
+    pts, init, k = _dataset(n=6000, k=32)
+    r_l = lloyd(pts, init, max_iters=50, tol=1e-5)
+    r_h = yinyang(pts, init, n_groups=1, max_iters=50, tol=1e-5)
+    r_y = yinyang(pts, init, max_iters=50, tol=1e-5)
+    assert float(r_h.distance_evals) < float(r_l.distance_evals)
+    assert float(r_y.distance_evals) < float(r_h.distance_evals)
+    # clustered data after warmup should prune the large majority
+    assert float(r_y.distance_evals) < 0.5 * float(r_l.distance_evals)
+
+
+def test_inertia_monotone_nonincreasing_across_iters():
+    pts, init, k = _dataset(n=2000, k=8, seed=3)
+    prev = None
+    for iters in (1, 2, 4, 8):
+        r = lloyd(pts, init, max_iters=iters, tol=0.0)
+        val = float(r.inertia)
+        if prev is not None:
+            assert val <= prev + 1e-3
+        prev = val
+
+
+def test_kmeans_plusplus_beats_random_init():
+    pts, _, k = _dataset(n=4000, d=8, k=24, seed=5)
+    key = jax.random.PRNGKey(7)
+    init_pp = kmeans_plusplus(key, pts, k)
+    init_rand = random_init(key, pts, k)
+    r_pp = lloyd(pts, init_pp, max_iters=1, tol=0.0)
+    r_rand = lloyd(pts, init_rand, max_iters=1, tol=0.0)
+    assert float(r_pp.inertia) < float(r_rand.inertia)
+
+
+def test_group_centroids_partition():
+    c = jax.random.normal(jax.random.PRNGKey(0), (40, 6))
+    g = group_centroids(c, 5)
+    assert g.shape == (40,)
+    assert int(g.min()) >= 0 and int(g.max()) < 5
+
+
+def test_sklearn_style_api():
+    pts, _, _ = _dataset(n=1500, k=8)
+    km = KMeans(n_clusters=8, algorithm="yinyang", seed=1).fit(pts)
+    km_l = KMeans(n_clusters=8, algorithm="lloyd", seed=1).fit(pts)
+    assert km.labels_.shape == (1500,)
+    assert km.cluster_centers_.shape == (8, pts.shape[1])
+    np.testing.assert_allclose(km.inertia_, km_l.inertia_, rtol=1e-5)
+    assert km.distance_evals_ < km_l.distance_evals_
+    pred = km.predict(pts[:10])
+    np.testing.assert_array_equal(pred, km.labels_[:10])
+
+
+def test_empty_cluster_keeps_previous_centroid():
+    # two far blobs, k=3: one centroid starts far away and owns nothing
+    pts = jnp.concatenate([
+        jnp.ones((50, 2)), -jnp.ones((50, 2))])
+    init = jnp.asarray([[1.0, 1.0], [-1.0, -1.0], [100.0, 100.0]])
+    r = lloyd(pts, init, max_iters=5, tol=1e-6)
+    assert np.isfinite(np.asarray(r.centroids)).all()
+    r_y = yinyang(pts, init, n_groups=1, max_iters=5, tol=1e-6)
+    np.testing.assert_array_equal(np.asarray(r.assignments),
+                                  np.asarray(r_y.assignments))
+
+
+def test_compact_path_matches_lloyd():
+    from repro.core import yinyang_compact
+    pts, init, k = _dataset(n=4000, k=24, seed=7)
+    r_l = lloyd(pts, init, max_iters=40, tol=1e-5)
+    r_c = yinyang_compact(pts, init, max_iters=40, tol=1e-5)
+    np.testing.assert_allclose(float(r_l.inertia), float(r_c.inertia),
+                               rtol=1e-5)
+    agree = (np.asarray(r_l.assignments) ==
+             np.asarray(r_c.assignments)).mean()
+    assert agree > 0.999  # fp-tie divergence only
+    assert float(r_c.distance_evals) < float(r_l.distance_evals)

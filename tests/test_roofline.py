@@ -1,0 +1,68 @@
+"""Roofline machinery: HLO collective parser + accounting sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import (_shape_bytes, collective_bytes_per_device,
+                                     model_flops, roofline)
+
+
+def test_shape_bytes_parser():
+    assert _shape_bytes("f32[128,64]{1,0}") == 128 * 64 * 4
+    assert _shape_bytes("bf16[2,3,4]") == 24 * 2
+    assert _shape_bytes("(f32[8], s32[8])") == 8 * 4 + 8 * 4
+    assert _shape_bytes("pred[16]") == 16
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_collective_parser_counts_psum():
+    hlo = """
+  %x = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %p), replica_groups={}
+  %y = bf16[64]{0} all-gather(bf16[32]{0} %q), dimensions={0}
+  %z = (f32[16], u32[]) all-reduce-start(f32[16] %r)
+  %w = f32[16] all-reduce-done((f32[16], u32[]) %z)
+"""
+    out = collective_bytes_per_device(hlo)
+    assert out["bytes"]["all-reduce"] == 1024 * 512 * 4 + 16 * 4 + 4
+    assert out["bytes"]["all-gather"] == 64 * 2
+    assert out["counts"]["all-reduce"] == 2  # start counted, done skipped
+    assert out["total"] > 0
+
+
+def test_collective_parser_on_real_lowering():
+    mesh = jax.make_mesh((1,), ("d",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(x):
+        return x.sum()
+
+    with mesh:
+        lowered = jax.jit(
+            f, in_shardings=NamedSharding(mesh, P("d")),
+            out_shardings=NamedSharding(mesh, P())).lower(
+                jax.ShapeDtypeStruct((64, 64), jnp.float32))
+        txt = lowered.compile().as_text()
+    out = collective_bytes_per_device(txt)   # 1 device: may be zero; parses
+    assert out["total"] >= 0
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro.configs import get_config
+    dense = get_config("mistral-nemo-12b")
+    moe = get_config("qwen3-moe-235b-a22b")
+    f_moe = model_flops(moe, "train", 1, 1)
+    # active fraction: top-8 of 128 experts -> expert flops scaled by 1/16
+    total_expert_params = (moe.n_experts * moe.d_model * moe.d_ff * 3
+                           * moe.n_layers)
+    active_expert_params = total_expert_params * moe.moe_top_k / moe.n_experts
+    assert f_moe < 6 * (total_expert_params + 1e12)
+    assert f_moe > 6 * active_expert_params  # attn etc on top
+
+
+def test_roofline_identifies_bottleneck():
+    r = roofline({"flops": 1e12, "bytes accessed": 1e9}, 0, 256)
+    assert r["bottleneck"] == "compute"
+    r = roofline({"flops": 1e9, "bytes accessed": 1e12}, 0, 256)
+    assert r["bottleneck"] == "memory"
+    r = roofline({"flops": 1e9, "bytes accessed": 1e9}, int(1e12), 256)
+    assert r["bottleneck"] == "collective"

@@ -1,0 +1,82 @@
+"""Partition-rule unit tests: every param leaf has a rule, specs match
+tree structure, divisibility of sharded dims on the production shape."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_configs
+from repro.launch.sharding import (batch_pspecs, cache_pspecs, param_pspecs,
+                                   train_state_pspecs)
+from repro.models.transformer import param_shapes
+
+MESH_SHAPE = {"data": 16, "model": 16}
+
+
+def _leaves_with_specs(cfg):
+    shapes = param_shapes(cfg)
+    specs = param_pspecs(cfg)
+    flat_sh = jax.tree.leaves(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_sp = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    return list(zip(flat_sh, flat_sp))
+
+
+@pytest.mark.parametrize("arch", list_configs())
+def test_every_param_has_rule_and_divides(arch):
+    cfg = get_config(arch)
+    pairs = _leaves_with_specs(cfg)
+    assert pairs, "no params"
+    for shape, spec in pairs:
+        assert isinstance(spec, P)
+        assert len(spec) <= len(shape)
+        for dim, axis in zip(shape, spec):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            par = 1
+            for a in axes:
+                par *= MESH_SHAPE[a]
+            assert dim % par == 0, \
+                f"{arch}: dim {dim} not divisible by {par} ({spec})"
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "qwen3-moe-235b-a22b",
+                                  "mamba2-780m", "hymba-1.5b",
+                                  "minicpm3-4b"])
+def test_serve_tp_strips_data_axis(arch):
+    cfg = get_config(arch)
+    specs = jax.tree.leaves(param_pspecs(cfg, serve_tp=True),
+                            is_leaf=lambda x: isinstance(x, P))
+    for spec in specs:
+        assert "data" not in [a for e in spec for a in
+                              (e if isinstance(e, tuple) else (e,))
+                              if e is not None]
+
+
+def test_train_state_specs_mirror_params():
+    cfg = get_config("phi4-mini-3.8b")
+    ts = train_state_pspecs(cfg)
+    assert ts.step == P()
+    assert jax.tree.structure(ts.params, is_leaf=lambda x: isinstance(x, P)) \
+        == jax.tree.structure(ts.m, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_cache_specs_batch_vs_seq_sharding():
+    cfg = get_config("qwen2-7b")
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    big = cache_pspecs(cfg, mesh, batch=128)
+    small = cache_pspecs(cfg, mesh, batch=1)
+    # batch >= data parallelism: batch dim sharded, seq on model
+    assert big["k"][1] is not None
+    # batch=1: seq spread over every axis
+    assert small["k"][1] is None
+    assert isinstance(small["k"][2], tuple)
+
+
+def test_batch_2d_extends_axes():
+    import dataclasses
+    cfg = get_config("hymba-1.5b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    b1 = batch_pspecs(cfg, mesh)
+    b2 = batch_pspecs(dataclasses.replace(cfg, batch_2d=True), mesh)
+    assert "model" not in b1["tokens"][0]
+    assert "model" in b2["tokens"][0]

@@ -1,0 +1,61 @@
+"""End-to-end system behaviour: the paper's pipeline as a user sees it."""
+import subprocess
+import sys
+import os
+
+import jax
+import numpy as np
+
+from repro.core import KMeans
+from repro.data import make_points
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_kpynq_end_to_end_clusters_blobs():
+    """Well-separated blobs must be recovered (ARI-style purity check)."""
+    pts, centers, truth = make_points(5000, 16, 12, seed=1,
+                                      cluster_std=0.5, spread=20.0)
+    km = KMeans(n_clusters=12, algorithm="yinyang", seed=0).fit(pts)
+    # purity: each found cluster dominated by one true label
+    labels = km.labels_
+    purity = 0
+    for c in range(12):
+        members = truth[labels == c]
+        if len(members):
+            purity += np.bincount(members, minlength=12).max()
+    assert purity / len(truth) > 0.95
+
+
+def test_speedup_workload_reduction_scales_with_k():
+    """The paper's thesis: work saving grows with K (more centroids ->
+    more filterable distance evaluations)."""
+    pts, _, _ = make_points(8000, 16, 64, seed=3)
+    ratios = []
+    for k in (8, 64):
+        km_y = KMeans(n_clusters=k, algorithm="yinyang", seed=0).fit(pts)
+        km_l = KMeans(n_clusters=k, algorithm="lloyd", seed=0).fit(pts)
+        ratios.append(km_y.distance_evals_ / km_l.distance_evals_)
+    assert ratios[1] < ratios[0]
+
+
+def test_train_launcher_cli(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "musicgen-medium", "--reduced", "--steps", "6", "--batch", "2",
+         "--seq", "32", "--ckpt-dir", str(tmp_path)],
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
+        capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "loss" in out.stdout
+
+
+def test_serve_launcher_cli():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "mamba2-780m", "--reduced", "--batch", "2", "--prompt-len", "8",
+         "--gen-len", "4"],
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
+        capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "tok/s" in out.stdout
