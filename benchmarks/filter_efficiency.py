@@ -1,6 +1,15 @@
 """Filter-efficiency figure: per-iteration survival rates of the two
-filter levels, and the block-granular density the Pallas kernel sees
-(the FPGA->TPU adaptation loss: per-point savings vs block savings)."""
+filter levels, and the block-granular density the Pallas kernels see
+(the FPGA->TPU adaptation loss: per-point savings vs block savings).
+
+Two block granularities are reported: the (tile_n x tile_k) centroid
+blocks of ``filtered_assign`` and the (tile_n x GROUP) blocks of the
+engine's ``grouped_assign`` kernel (``gblock*`` columns) — the latter
+maps each group-filter decision onto exactly one skippable block, so
+its density is the fraction of MXU work the engine's TPU backend
+actually issues. ``gbucket`` is the max surviving-group count per
+candidate: the engine's centroid-level compaction gathers only this
+many group buckets per point on CPU/GPU."""
 from __future__ import annotations
 
 import jax
@@ -11,7 +20,7 @@ from repro.core.distances import pairwise_dists, rowwise_dists
 from repro.core.kmeans import (_filtered_step, _init_filter_state,
                                group_centroids)
 from repro.data import make_points
-from repro.kernels import build_block_mask
+from repro.kernels import build_block_mask, build_group_block_mask
 
 
 def run(n=32768, d=32, k=128, iters=12,
@@ -39,9 +48,11 @@ def run(n=32768, d=32, k=128, iters=12,
         ub_t = jnp.where(maybe, d_own, ub)
         need = ub_t > glb
         group_need = need[:, None] & (lb < ub_t[:, None])
+        gcnt = jnp.sum(group_need.astype(jnp.int32), axis=1)
         row = {"iter": it,
                "point_survival": float(jnp.mean(need)),
-               "pair_survival": float(jnp.mean(group_need[:, groups]))}
+               "pair_survival": float(jnp.mean(group_need[:, groups])),
+               "gbucket": int(jnp.max(gcnt))}
         # block density at several tile granularities, unsorted and with
         # points re-ordered by current assignment (colocates survivors —
         # the data-layout half of the FPGA->TPU co-design)
@@ -52,6 +63,11 @@ def run(n=32768, d=32, k=128, iters=12,
             ms = build_block_mask(gn_sorted, groups, tile_n=tn, tile_k=tk)
             row[f"block{tn}x{tk}"] = float(jnp.mean(m))
             row[f"block{tn}x{tk}_sorted"] = float(jnp.mean(ms))
+        for tn in sorted({t for t, _ in tiles}):
+            gm = build_group_block_mask(group_need, tile_n=tn)
+            gms = build_group_block_mask(gn_sorted, tile_n=tn)
+            row[f"gblock{tn}"] = float(jnp.mean(gm))
+            row[f"gblock{tn}_sorted"] = float(jnp.mean(gms))
         rows.append(row)
     return rows
 
@@ -62,15 +78,17 @@ def main():
     for r in rows:
         extras = " ".join(f"{k.replace('block', 'b')}={v:.3f}"
                           for k, v in r.items()
-                          if k.startswith("block"))
+                          if "block" in k)
         print(f"filter_efficiency/iter{r['iter']:02d},,"
               f"point={r['point_survival']:.3f} "
-              f"pair={r['pair_survival']:.3f} {extras}")
+              f"pair={r['pair_survival']:.3f} "
+              f"gbucket={r['gbucket']} {extras}")
     last = rows[-1]
     extras = " ".join(f"{k.replace('block', 'b')}={v:.3f}"
-                      for k, v in last.items() if k.startswith("block"))
+                      for k, v in last.items() if "block" in k)
     print(f"filter_efficiency/STEADY,,point={last['point_survival']:.3f} "
-          f"pair={last['pair_survival']:.3f} {extras}")
+          f"pair={last['pair_survival']:.3f} "
+          f"gbucket={last['gbucket']} {extras}")
     return rows
 
 

@@ -1,8 +1,11 @@
 """Benchmark harness: one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
 
-Prints ``name,us_per_call,derived`` CSV per line.
+Prints ``name,us_per_call,derived`` CSV per line, and writes the
+K-means perf record to ``BENCH_kmeans.json`` (per-dataset ``lloyd_ms``,
+``engine_ms``, ``speedup``, ``work_reduction`` + suite means) so the
+perf trajectory is tracked across PRs.
 """
 import argparse
 import sys
@@ -12,6 +15,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller problem sizes (CI-friendly)")
+    ap.add_argument("--json", default="BENCH_kmeans.json",
+                    help="path for the machine-readable K-means record "
+                         "('' disables)")
     args = ap.parse_args()
     scale = 0.1 if args.quick else 1.0
 
@@ -19,7 +25,7 @@ def main() -> None:
     from . import kmeans_speedup, roofline_report
 
     print("# === paper Table: KPynq vs standard K-means ===", flush=True)
-    kmeans_speedup.main(scale=scale)
+    kmeans_speedup.main(scale=scale, json_path=args.json or None)
     print("# === filter efficiency (multi-level filter rates) ===",
           flush=True)
     filter_efficiency.main()

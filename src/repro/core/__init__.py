@@ -1,14 +1,16 @@
 """KPynq core: work-efficient triangle-inequality K-means in JAX."""
-from .api import KMeans
+from .api import KMeans, NotFittedError
 from .distances import pairwise_dists, pairwise_sq_dists, rowwise_dists
 from .compact import yinyang_compact
 from .distributed import distributed_yinyang
+from .engine import EngineStats, fit as engine_fit
 from .init import kmeans_plusplus, random_init
-from .kmeans import KMeansResult, group_centroids, lloyd, yinyang
+from .kmeans import EvalCount, KMeansResult, group_centroids, lloyd, yinyang
 
 __all__ = [
-    "KMeans", "KMeansResult", "lloyd", "yinyang", "group_centroids",
-    "kmeans_plusplus", "random_init", "distributed_yinyang",
-    "yinyang_compact",
+    "KMeans", "KMeansResult", "NotFittedError", "lloyd", "yinyang",
+    "group_centroids", "kmeans_plusplus", "random_init",
+    "distributed_yinyang", "yinyang_compact", "engine_fit", "EngineStats",
+    "EvalCount",
     "pairwise_dists", "pairwise_sq_dists", "rowwise_dists",
 ]

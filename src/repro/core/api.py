@@ -4,8 +4,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import engine as _engine
 from . import kmeans as _km
 from .init import kmeans_plusplus, random_init
+
+
+class NotFittedError(ValueError, AttributeError):
+    """Raised when results are requested from an unfitted estimator.
+
+    Inherits both ValueError and AttributeError (the sklearn
+    convention) so existing ``except AttributeError`` call sites keep
+    working while the message actually says what went wrong.
+    """
 
 
 class KMeans:
@@ -21,13 +31,28 @@ class KMeans:
     n_groups : group count for 'yinyang' (default K//10, the paper-family
         heuristic).
     init : 'k-means++' | 'random'
+    engine : None | 'auto' | 'oracle' | 'compact' | 'pallas'
+        None runs the reference ``lax.while_loop`` implementation in
+        :mod:`repro.core.kmeans`. Any other value routes the filtered
+        algorithms through the device-resident execution engine
+        (:mod:`repro.core.engine`), which realises both filter levels
+        as skipped work — 'auto' picks the Pallas block-skip kernel on
+        TPU and two-level stream compaction elsewhere. Results are
+        identical either way; only the wall-clock changes. Ignored for
+        ``algorithm='lloyd'`` (there is nothing to filter).
     """
 
     def __init__(self, n_clusters: int, algorithm: str = "yinyang",
                  n_groups: int | None = None, init: str = "k-means++",
-                 max_iters: int = 100, tol: float = 1e-4, seed: int = 0):
+                 max_iters: int = 100, tol: float = 1e-4, seed: int = 0,
+                 engine: str | None = None):
         if algorithm not in ("lloyd", "hamerly", "yinyang"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
+        if engine is not None and engine != "auto" \
+                and engine not in _engine.BACKENDS:
+            raise ValueError(
+                f"unknown engine {engine!r}; expected None, 'auto' or one "
+                f"of {_engine.BACKENDS}")
         self.n_clusters = n_clusters
         self.algorithm = algorithm
         self.n_groups = n_groups
@@ -35,6 +60,7 @@ class KMeans:
         self.max_iters = max_iters
         self.tol = tol
         self.seed = seed
+        self.engine = engine
         self.result_: _km.KMeansResult | None = None
 
     def _init_centroids(self, points):
@@ -48,38 +74,49 @@ class KMeans:
         init_c = self._init_centroids(points)
         if self.algorithm == "lloyd":
             res = _km.lloyd(points, init_c, self.max_iters, self.tol)
-        elif self.algorithm == "hamerly":
-            res = _km.yinyang(points, init_c, n_groups=1,
-                              max_iters=self.max_iters, tol=self.tol)
         else:
-            res = _km.yinyang(points, init_c, n_groups=self.n_groups,
-                              max_iters=self.max_iters, tol=self.tol)
+            n_groups = 1 if self.algorithm == "hamerly" else self.n_groups
+            if self.engine is None:
+                res = _km.yinyang(points, init_c, n_groups=n_groups,
+                                  max_iters=self.max_iters, tol=self.tol)
+            else:
+                res = _engine.fit(points, init_c, n_groups=n_groups,
+                                  max_iters=self.max_iters, tol=self.tol,
+                                  backend=self.engine)
         self.result_ = jax.tree.map(jax.device_get, res)
         return self
+
+    def _fitted(self) -> _km.KMeansResult:
+        if self.result_ is None:
+            raise NotFittedError(
+                f"This KMeans instance is not fitted yet; call "
+                f"fit() before using this "
+                f"{type(self).__name__} attribute/method.")
+        return self.result_
 
     # sklearn-style accessors ------------------------------------------------
     @property
     def cluster_centers_(self):
-        return self.result_.centroids
+        return self._fitted().centroids
 
     @property
     def labels_(self):
-        return self.result_.assignments
+        return self._fitted().assignments
 
     @property
     def inertia_(self):
-        return float(self.result_.inertia)
+        return float(self._fitted().inertia)
 
     @property
     def n_iter_(self):
-        return int(self.result_.n_iters)
+        return int(self._fitted().n_iters)
 
     @property
     def distance_evals_(self):
         """Work-efficiency counter: distance evaluations performed."""
-        return float(self.result_.distance_evals)
+        return float(self._fitted().distance_evals)
 
     def predict(self, points):
         from .distances import pairwise_dists
-        d = pairwise_dists(jnp.asarray(points), self.result_.centroids)
+        d = pairwise_dists(jnp.asarray(points), self._fitted().centroids)
         return jax.device_get(jnp.argmin(d, axis=1))

@@ -1,14 +1,18 @@
-"""Stream-compaction K-means: the work-saving actually realised on
-dense-SIMD hardware (and measurably on CPU wall-clock).
+"""Legacy host-driven stream-compaction K-means driver.
 
-The masked-dense oracle in kmeans.py has identical RESULTS but computes
-every distance and throws the filtered ones away — fine as ground truth,
-useless for speed. This module drives the same bound logic from the
-host, gathers the surviving points into a padded bucket
-(power-of-two capacities so jit recompiles O(log N) times, not per
-iteration) and runs the distance pass ONLY on survivors — the TPU
-equivalent is the block-skip Pallas kernel; on CPU/XLA this is what
-turns filter rates into wall-clock speedup (benchmarks/kmeans_speedup).
+Superseded by :mod:`repro.core.engine` — kept as the wall-clock
+BASELINE the engine is benchmarked against (``benchmarks/
+kmeans_speedup.py`` reports oracle vs compact vs engine side by side).
+
+The iteration math is the engine's own (``engine.move_and_bounds`` /
+``engine.compact_candidate_pass`` with the centroid-level bucket
+disabled); what makes this the *legacy* driver is the control flow:
+every iteration round-trips to the host (``int(jnp.sum(need))``,
+``float(shift)``) to pick the next compaction capacity, and each new
+power-of-two capacity recompiles. The engine replaces exactly that —
+same math under ``lax.while_loop`` with bucketed capacities — so any
+wall-clock gap between the two is pure host-sync/recompile overhead
+plus the engine's group-level compaction.
 """
 from __future__ import annotations
 
@@ -16,76 +20,32 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .distances import pairwise_dists, rowwise_dists
-from .kmeans import (KMeansResult, _init_filter_state, group_centroids,
-                     update_centroids)
+from .distances import rowwise_dists
+from .engine import compact_candidate_pass, move_and_bounds
+from .kmeans import KMeansResult, _init_filter_state, group_centroids
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_groups"))
 def _move_and_bounds(points, centroids, assignments, ub, lb, groups,
                      *, k, n_groups):
-    new_c, _ = update_centroids(points, assignments, k, centroids)
-    drift = jnp.linalg.norm(new_c - centroids, axis=-1)
-    gd = jax.ops.segment_max(drift, groups, num_segments=n_groups)
-    shift = jnp.max(drift)
-    ub = ub + drift[assignments]
-    lb = jnp.maximum(lb - gd[None, :], 0.0)
-    glb = jnp.min(lb, axis=1)
-    maybe = ub > glb
-    d_own = rowwise_dists(points, new_c[assignments])
-    ub_t = jnp.where(maybe, d_own, ub)
-    need = ub_t > glb
-    return new_c, ub_t, lb, need, shift, jnp.sum(maybe.astype(jnp.float32))
+    return move_and_bounds(points, centroids, assignments, ub, lb, groups,
+                           k=k, n_groups=n_groups)
 
 
 @functools.partial(jax.jit, static_argnames=("cap", "n_groups"))
 def _candidate_pass(points, new_c, assignments, ub_t, lb, groups, need,
                     *, cap, n_groups):
-    """Gather `cap` candidates, compute their distances to ALL centroids
-    (point-level compaction), apply the group filter as a mask, and
-    scatter updated (assign, ub, lb) back."""
-    n = points.shape[0]
-    pos = jnp.cumsum(need.astype(jnp.int32)) - 1
-    slot = jnp.where(need, pos, cap)
-    idx = jnp.zeros((cap,), jnp.int32).at[slot].set(
-        jnp.arange(n, dtype=jnp.int32), mode="drop")
-    valid = jnp.arange(cap) < jnp.sum(need.astype(jnp.int32))
-
-    cpts = points[idx]                                       # (cap, D)
-    c_ub = ub_t[idx]
-    c_lb = lb[idx]                                           # (cap, G)
-    c_as = assignments[idx]
-
-    d_all = pairwise_dists(cpts, new_c)                      # (cap, K)
-    gmask = (c_lb < c_ub[:, None])[:, groups]                # (cap, K)
-    d_cand = jnp.where(gmask, d_all, jnp.inf)
-    best = jnp.argmin(d_cand, axis=1).astype(jnp.int32)
-    best_d = jnp.min(d_cand, axis=1)
-    changed = best_d < c_ub
-    new_as = jnp.where(changed, best, c_as)
-    new_ub = jnp.minimum(c_ub, best_d)
-
-    rows = jnp.arange(cap)
-    d_excl = d_cand.at[rows, new_as].set(jnp.inf)
-    # per-group min via segment_min over the (transposed) centroid axis:
-    # O(cap*K) instead of the O(cap*K*G) masked-min formulation
-    lb_comp = jax.ops.segment_min(d_excl.T, groups,
-                                  num_segments=n_groups).T   # (cap, G)
-    gneed = c_lb < c_ub[:, None]
-    new_lb = jnp.where(gneed, lb_comp, c_lb)
-    old_group = groups[c_as]
-    new_lb = new_lb.at[rows, old_group].min(
-        jnp.where(changed, c_ub, jnp.inf))
-
-    # scatter back (invalid slots write to row idx 0 harmlessly guarded)
-    write = valid
-    sidx = jnp.where(write, idx, n)                           # OOB drop
-    assignments = assignments.at[sidx].set(new_as, mode="drop")
-    ub_out = ub_t.at[sidx].set(new_ub, mode="drop")
-    lb_out = lb.at[sidx].set(new_lb, mode="drop")
-    return assignments, ub_out, lb_out
+    # cap_g = n_groups disables the centroid-level bucket: this driver
+    # computes every candidate against all K centroids, as the seed did.
+    k = new_c.shape[0]
+    dummy_members = jnp.full((n_groups, 1), -1, jnp.int32)
+    dummy_gsize = jnp.zeros((n_groups,), jnp.float32)
+    a, u, l, _, _ = compact_candidate_pass(
+        points, new_c, assignments, ub_t, lb, groups, dummy_members,
+        dummy_gsize, need, cap_n=cap, cap_g=n_groups, n_groups=n_groups,
+        use_groups=False)
+    return a, u, l
 
 
 def yinyang_compact(points, init_centroids, n_groups=None,
@@ -101,7 +61,7 @@ def yinyang_compact(points, init_centroids, n_groups=None,
                                groups, n_groups)
     centroids, assignments = state.centroids, state.assignments
     ub, lb = state.ub, state.lb
-    evals = float(state.distance_evals)
+    evals = float(state.distance_evals.total())
 
     it = 0
     for it in range(1, max_iters + 1):
@@ -109,7 +69,7 @@ def yinyang_compact(points, init_centroids, n_groups=None,
             points, centroids, assignments, ub, lb, groups,
             k=k, n_groups=n_groups)
         evals += float(tighten)
-        n_cand = int(jnp.sum(need))
+        n_cand = int(jnp.sum(need))           # per-iteration host sync
         if n_cand > 0:
             cap = max(min_cap, 1 << (n_cand - 1).bit_length())
             cap = min(cap, n)
@@ -117,7 +77,7 @@ def yinyang_compact(points, init_centroids, n_groups=None,
                 points, centroids, assignments, ub, lb, groups, need,
                 cap=cap, n_groups=n_groups)
             evals += float(n_cand * k)
-        if float(shift) <= tol:
+        if float(shift) <= tol:               # per-iteration host sync
             break
 
     d = rowwise_dists(points, centroids[assignments])

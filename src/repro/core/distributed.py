@@ -8,6 +8,11 @@ sums + (K,) counts + scalar drift — exactly the FPGA design's
 onto ICI collectives. Filtering is per-shard local, so the work saving
 composes with parallelism.
 
+The per-shard iteration is the ENGINE's step (``engine.move_and_bounds``
+with a psum reduction hook + ``engine.dense_candidate_pass``) — one
+implementation of the filter math shared by the local and distributed
+paths, so exactness fixes land in both at once.
+
 Optional int8 error-feedback compression of the psum payload
 (``compress=True``) implements the gradient-compression analogue for the
 centroid partial sums.
@@ -21,9 +26,22 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .distances import pairwise_dists, rowwise_dists
+# shard_map moved out of jax.experimental (and check_rep was renamed
+# check_vma) across jax generations; support both so `import repro.core`
+# works everywhere. The flag disables the replication/vma check: psum
+# outputs are value-replicated but the static analysis cannot prove it
+# through the while_loop carry.
+try:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+except ImportError:                      # jax >= 0.7
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+
+from .distances import rowwise_dists
+from .engine import dense_candidate_pass, move_and_bounds
 from .kmeans import (FilterState, KMeansResult, _init_filter_state,
-                     group_centroids, update_centroids)
+                     group_centroids)
 
 
 def _psum_maybe_compressed(x: jnp.ndarray, axes, compress: bool):
@@ -37,14 +55,6 @@ def _psum_maybe_compressed(x: jnp.ndarray, axes, compress: bool):
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     deq = q.astype(jnp.float32) * scale
     return jax.lax.psum(deq, axes)
-
-
-def _local_update_sums(points, assignments, k):
-    pts = points.astype(jnp.float32)
-    sums = jax.ops.segment_sum(pts, assignments, num_segments=k)
-    counts = jax.ops.segment_sum(jnp.ones((pts.shape[0],), jnp.float32),
-                                 assignments, num_segments=k)
-    return sums, counts
 
 
 def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
@@ -65,17 +75,18 @@ def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
     axes = tuple(axes)
     pspec = P(axes, None)
 
+    def reduce_sums(sums, counts):
+        return (_psum_maybe_compressed(sums, axes, compress),
+                jax.lax.psum(counts, axes))
+
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(pspec, P(None, None)),
         out_specs=(P(None, None), P(axes), P(), P(), P()),
-        # psum outputs are value-replicated but the static vma analysis
-        # cannot prove it through the while_loop carry; disable the check
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
     def fit_sharded(local_points, init_c):
         groups = group_centroids(init_c, n_groups)
-        n_local = local_points.shape[0]
 
         # replicated init assignment pass (local points only)
         state0 = _init_filter_state(local_points, init_c, groups, n_groups)
@@ -85,66 +96,17 @@ def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
                                    state.shift > tol)
 
         def body(state: FilterState):
-            # ---- local filtered assignment (same math as kmeans.py) ----
-            rows = jnp.arange(n_local)
-            sums, counts = _local_update_sums(local_points,
-                                              state.assignments, k)
-            sums = _psum_maybe_compressed(sums, axes, compress)
-            counts = jax.lax.psum(counts, axes)
-            safe = jnp.maximum(counts, 1.0)[:, None]
-            new_c = jnp.where(counts[:, None] > 0, sums / safe,
-                              state.centroids)
-
-            drift = jnp.linalg.norm(new_c - state.centroids, axis=-1)
-            group_drift = jax.ops.segment_max(drift, groups,
-                                              num_segments=n_groups)
-            shift = jnp.max(drift)
-
-            ub = state.ub + drift[state.assignments]
-            lb = jnp.maximum(state.lb - group_drift[None, :], 0.0)
-            glb = jnp.min(lb, axis=1)
-            maybe = ub > glb
-            d_own = rowwise_dists(local_points, new_c[state.assignments])
-            ub_t = jnp.where(maybe, d_own, ub)
-            need = ub_t > glb
-            evals = state.distance_evals + jnp.sum(maybe.astype(jnp.float32))
-
-            group_need = need[:, None] & (lb < ub_t[:, None])
-            cand = group_need[:, groups]
-            evals = evals + jnp.sum(cand.astype(jnp.float32))
-
-            if opt_sq:
-                from .distances import pairwise_sq_dists
-                d2 = jnp.where(cand, pairwise_sq_dists(local_points, new_c),
-                               jnp.inf)
-                best_other = jnp.argmin(d2, axis=1).astype(jnp.int32)
-                best_other_d = jnp.sqrt(jnp.min(d2, axis=1))
-                d_excl = d2  # sqrt applied after the segment reduction
-            else:
-                d_all = pairwise_dists(local_points, new_c)
-                d_cand = jnp.where(cand, d_all, jnp.inf)
-                best_other = jnp.argmin(d_cand, axis=1).astype(jnp.int32)
-                best_other_d = jnp.min(d_cand, axis=1)
-            new_assign = jnp.where(best_other_d < ub_t, best_other,
-                                   state.assignments)
-            new_ub = jnp.minimum(ub_t, best_other_d)
-
-            if opt_sq:
-                d_excl = d_excl.at[rows, new_assign].set(jnp.inf)
-                lb_comp = jnp.sqrt(jax.ops.segment_min(
-                    d_excl.T, groups, num_segments=n_groups)).T
-            else:
-                d_excl = d_cand.at[rows, new_assign].set(jnp.inf)
-                lb_comp = jax.ops.segment_min(d_excl.T, groups,
-                                              num_segments=n_groups).T
-            new_lb = jnp.where(group_need, lb_comp, lb)
-            changed = best_other_d < ub_t
-            old_group = groups[state.assignments]
-            new_lb = new_lb.at[rows, old_group].min(
-                jnp.where(changed, ub_t, jnp.inf))
-
+            new_c, ub_t, lb_dec, need, shift, tightened = move_and_bounds(
+                local_points, state.centroids, state.assignments,
+                state.ub, state.lb, groups, k=k, n_groups=n_groups,
+                reduce_sums=reduce_sums)
+            new_assign, new_ub, new_lb, pairs = dense_candidate_pass(
+                local_points, new_c, state.assignments, ub_t, lb_dec,
+                groups, need, n_groups=n_groups, opt_sq=opt_sq)
             return FilterState(state.iteration + 1, new_c, new_assign,
-                               new_ub, new_lb, shift, evals)
+                               new_ub, new_lb, shift,
+                               state.distance_evals.add(tightened)
+                               .add(pairs))
 
         if unroll_iters > 0:
             state = state0
@@ -154,7 +116,7 @@ def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
             state = jax.lax.while_loop(cond, body, state0)
         d = rowwise_dists(local_points, state.centroids[state.assignments])
         inertia = jax.lax.psum(jnp.sum(d * d), axes)
-        evals = jax.lax.psum(state.distance_evals, axes)
+        evals = jax.lax.psum(state.distance_evals.total(), axes)
         return (state.centroids, state.assignments, state.iteration,
                 evals, inertia)
 

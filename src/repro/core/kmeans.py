@@ -18,6 +18,7 @@ ground truth they are tested against.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -30,26 +31,42 @@ from .distances import pairwise_dists, rowwise_dists
 # shared pieces
 # --------------------------------------------------------------------------
 
-def update_centroids(points, assignments, k, prev_centroids):
-    """Segment-sum centroid update — O(N*D), the right formulation for
-    CPU/scatter hardware. (The TPU path uses the one-hot MXU matmul in
-    kernels/centroid_update.py instead; same math.)
-
-    Empty clusters keep their previous centroid (standard practice; also
-    what keeps the filtered and unfiltered paths bit-identical).
-    """
+def centroid_sums(points, assignments, k):
+    """Per-cluster partial sums + counts — the psum'able half of the
+    centroid update (the distributed fit reduces these across shards
+    before dividing)."""
     pts = points.astype(jnp.float32)
     sums = jax.ops.segment_sum(pts, assignments, num_segments=k)   # (K, D)
     counts = jax.ops.segment_sum(jnp.ones((pts.shape[0],), jnp.float32),
                                  assignments, num_segments=k)      # (K,)
+    return sums, counts
+
+
+def centroids_from_sums(sums, counts, prev_centroids):
+    """Divide reduced sums by counts. Empty clusters keep their previous
+    centroid (standard practice; also what keeps the filtered and
+    unfiltered paths bit-identical). THE single copy of that rule."""
     safe = jnp.maximum(counts, 1.0)[:, None]
-    return jnp.where(counts[:, None] > 0, sums / safe, prev_centroids), counts
+    return jnp.where(counts[:, None] > 0, sums / safe, prev_centroids)
 
 
+def update_centroids(points, assignments, k, prev_centroids):
+    """Segment-sum centroid update — O(N*D), the right formulation for
+    CPU/scatter hardware. (The TPU path uses the one-hot MXU matmul in
+    kernels/centroid_update.py instead; same math.)
+    """
+    sums, counts = centroid_sums(points, assignments, k)
+    return centroids_from_sums(sums, counts, prev_centroids), counts
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "n_iters"))
 def group_centroids(centroids: jnp.ndarray, n_groups: int, n_iters: int = 5):
     """Partition centroids into groups by clustering the centroids
     themselves (the Yinyang construction). Deterministic: seeds with a
-    strided subset. Returns int32 group ids of shape (K,)."""
+    strided subset. Returns int32 group ids of shape (K,).
+
+    Jitted (it is called eagerly by every fit driver, and an un-jitted
+    ``fori_loop`` costs ~100ms of per-op dispatch even for tiny K)."""
     k = centroids.shape[0]
     if n_groups >= k:
         return jnp.arange(k, dtype=jnp.int32) % n_groups
@@ -66,11 +83,42 @@ def group_centroids(centroids: jnp.ndarray, n_groups: int, n_iters: int = 5):
     return jnp.argmin(pairwise_dists(centroids, seeds), axis=1).astype(jnp.int32)
 
 
+class EvalCount(NamedTuple):
+    """Precision-safe distance-evaluation counter.
+
+    A single fp32 accumulator silently drops increments once the running
+    total passes 2^24 (adding ``n*k`` per iteration at paper scale blows
+    through that in one or two iterations). JAX runs with x64 disabled,
+    so int64/float64 are unavailable on-device; instead we carry a
+    compensated (hi, lo) fp32 pair (Fast2Sum): every rounding error of
+    ``hi`` is captured exactly in ``lo``, keeping integer counts exact to
+    ~2^48. ``total()`` collapses to one fp32 scalar (single final
+    rounding) so ``KMeansResult.distance_evals`` keeps its scalar API.
+    """
+    hi: jnp.ndarray               # running sum, fp32
+    lo: jnp.ndarray               # compensation term, fp32
+
+    @staticmethod
+    def of(x) -> "EvalCount":
+        return EvalCount(jnp.asarray(x, jnp.float32), jnp.float32(0))
+
+    def add(self, x) -> "EvalCount":
+        x = jnp.asarray(x, jnp.float32)
+        s = self.hi + x
+        # Neumaier branch: recover the exact rounding error of hi + x
+        big = jnp.where(jnp.abs(self.hi) >= jnp.abs(x), self.hi, x)
+        small = jnp.where(jnp.abs(self.hi) >= jnp.abs(x), x, self.hi)
+        return EvalCount(s, self.lo + ((big - s) + small))
+
+    def total(self) -> jnp.ndarray:
+        return self.hi + self.lo
+
+
 class KMeansResult(NamedTuple):
     centroids: jnp.ndarray        # (K, D) fp32
     assignments: jnp.ndarray      # (N,) int32
     n_iters: jnp.ndarray          # scalar int32
-    distance_evals: jnp.ndarray   # scalar int64-ish fp64-safe counter (fp32)
+    distance_evals: jnp.ndarray   # scalar fp32 (EvalCount.total())
     inertia: jnp.ndarray          # sum of squared distances to assigned
 
 
@@ -98,12 +146,12 @@ def lloyd(points, init_centroids, max_iters: int = 100, tol: float = 1e-4):
         assign = jnp.argmin(d, axis=1).astype(jnp.int32)
         new_c, _ = update_centroids(points, assign, k, centroids)
         shift = jnp.max(jnp.linalg.norm(new_c - centroids, axis=-1))
-        return i + 1, new_c, assign, shift, evals + jnp.float32(n * k)
+        return i + 1, new_c, assign, shift, evals.add(jnp.float32(n) * k)
 
     init = (jnp.int32(0), init_centroids.astype(jnp.float32),
-            jnp.zeros(n, jnp.int32), jnp.float32(jnp.inf), jnp.float32(0))
+            jnp.zeros(n, jnp.int32), jnp.float32(jnp.inf), EvalCount.of(0))
     i, centroids, assign, _, evals = jax.lax.while_loop(cond, body, init)
-    return KMeansResult(centroids, assign, i, evals,
+    return KMeansResult(centroids, assign, i, evals.total(),
                         _inertia(points, centroids, assign))
 
 
@@ -118,9 +166,10 @@ class FilterState(NamedTuple):
     ub: jnp.ndarray           # (N,)   upper bound on d(x, a(x))
     lb: jnp.ndarray           # (N, G) lower bound on d(x, nearest in group)
     shift: jnp.ndarray        # max centroid drift last iter
-    distance_evals: jnp.ndarray
+    distance_evals: EvalCount
 
 
+@functools.partial(jax.jit, static_argnums=(3,))
 def _init_filter_state(points, centroids, groups, n_groups):
     n, k = points.shape[0], centroids.shape[0]
     d = pairwise_dists(points, centroids)                       # (N, K)
@@ -131,7 +180,8 @@ def _init_filter_state(points, centroids, groups, n_groups):
     lb = jax.ops.segment_min(d_excl.T, groups,
                              num_segments=n_groups).T         # (N, G)
     return FilterState(jnp.int32(0), centroids.astype(jnp.float32), assign,
-                       ub, lb, jnp.float32(jnp.inf), jnp.float32(n * k))
+                       ub, lb, jnp.float32(jnp.inf),
+                       EvalCount.of(jnp.float32(n) * k))
 
 
 def _filtered_step(points, state: FilterState, groups, n_groups: int, k: int):
@@ -157,12 +207,12 @@ def _filtered_step(points, state: FilterState, groups, n_groups: int, k: int):
     d_own = rowwise_dists(points, new_c[state.assignments])
     ub_t = jnp.where(maybe, d_own, ub)
     need = ub_t > glb
-    evals = state.distance_evals + jnp.sum(maybe.astype(jnp.float32))
+    evals = state.distance_evals.add(jnp.sum(maybe.astype(jnp.float32)))
 
     # 4. GROUP-LEVEL FILTER: only groups with lb[x,g] < ub survive
     group_need = need[:, None] & (lb < ub_t[:, None])                  # (N, G)
     cand = group_need[:, groups]                                       # (N, K)
-    evals = evals + jnp.sum(cand.astype(jnp.float32))
+    evals = evals.add(jnp.sum(cand.astype(jnp.float32)))
 
     # 5. masked distance pass (the Distance Calculator). Algorithmically
     #    only `cand` entries are needed; the Pallas kernel skips
@@ -213,5 +263,5 @@ def yinyang(points, init_centroids, n_groups: int | None = None,
 
     state = jax.lax.while_loop(cond, body, state0)
     return KMeansResult(state.centroids, state.assignments, state.iteration,
-                        state.distance_evals,
+                        state.distance_evals.total(),
                         _inertia(points, state.centroids, state.assignments))

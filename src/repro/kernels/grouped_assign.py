@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: group-granular block-skip nearest-centroid search.
+
+The original ``filtered_assign`` kernel skips (tile_n x tile_k) blocks
+but only yields the global (min, argmin) — enough for Hamerly, not for
+Yinyang, whose lower-bound refresh needs *per-group* minima. This
+kernel makes the centroid grid dimension THE GROUP: the grid is
+``(N/tile_n, G)``, each step loads one group's (Lmax-padded) centroid
+bucket, and a skipped block is exactly one group-level filter decision
+realised as skipped MXU work.
+
+Per live block it maintains:
+
+* the running global ``(min_sq_dist, argmin)`` across groups
+  (sequential revisits over the minor grid axis, as in
+  ``filtered_assign``), and
+* per-(point, group) ``(min, argmin, second_min)`` — precisely the
+  triple the engine needs to rebuild the Yinyang lower bound
+  ``min_{c in g, c != assigned} d(x, c)`` without materialising any
+  (N, K) distance matrix: the excluded centroid can only collide with
+  the group argmin, in which case the second-min is the answer.
+
+Centroids arrive pre-bucketed as ``c_grouped`` (G, Lmax, D) with a
+parallel ``ids`` (G, Lmax) int32 table (-1 padding); padded slots are
+masked to +inf inside the kernel so empty/ragged groups are exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grouped_assign_kernel(mask_ref, x_ref, c_ref, ids_ref, best_ref,
+                           idx_ref, gmin_ref, garg_ref, gmin2_ref,
+                           *, lmax: int):
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init_global():
+        best_ref[...] = jnp.full_like(best_ref, jnp.inf)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    # per-group outputs are visited exactly once; default = "skipped"
+    gmin_ref[...] = jnp.full_like(gmin_ref, jnp.inf)
+    garg_ref[...] = jnp.full_like(garg_ref, -1)
+    gmin2_ref[...] = jnp.full_like(gmin2_ref, jnp.inf)
+
+    @pl.when(mask_ref[0, 0] != 0)
+    def _compute():
+        x = x_ref[...].astype(jnp.float32)                  # (tn, D)
+        c = c_ref[0].astype(jnp.float32)                    # (Lmax, D)
+        ids = ids_ref[0]                                    # (Lmax,)
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+        c2 = jnp.sum(c * c, axis=-1)[None, :]
+        cross = jax.lax.dot_general(
+            x, c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(x2 - 2.0 * cross + c2, 0.0)        # (tn, Lmax)
+        d2 = jnp.where((ids >= 0)[None, :], d2, jnp.inf)
+
+        min1 = jnp.min(d2, axis=1)                          # (tn,)
+        arg_local = jnp.argmin(d2, axis=1)                  # (tn,)
+        onehot = arg_local[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (1, lmax), 1)                        # (tn, Lmax)
+        arg = jnp.sum(jnp.where(onehot, ids[None, :], 0), axis=1)
+        min2 = jnp.min(jnp.where(onehot, jnp.inf, d2), axis=1)
+
+        gmin_ref[...] = min1[:, None]
+        garg_ref[...] = arg.astype(jnp.int32)[:, None]
+        gmin2_ref[...] = min2[:, None]
+
+        better = min1[:, None] < best_ref[...]
+        idx_ref[...] = jnp.where(better, arg.astype(jnp.int32)[:, None],
+                                 idx_ref[...])
+        best_ref[...] = jnp.minimum(best_ref[...], min1[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def grouped_assign(x: jnp.ndarray, c_grouped: jnp.ndarray,
+                   ids: jnp.ndarray, block_mask: jnp.ndarray, *,
+                   tile_n: int = 256, interpret: bool = False):
+    """Group-block-skipping nearest-centroid search with per-group stats.
+
+    x: (N, D); c_grouped: (G, Lmax, D) group-bucketed centroids;
+    ids: (G, Lmax) int32 original centroid index per slot (-1 = pad);
+    block_mask: (ceil(N/tile_n), G) bool/int — True where the group
+    must be scored for that point tile.
+
+    Returns ``(best (N,) fp32 sq-dist, idx (N,) int32,
+    gmin (N, G) fp32, garg (N, G) int32, gmin2 (N, G) fp32)``; skipped
+    (tile, group) blocks read as (inf, -1, inf), fully-skipped rows as
+    (inf, -1) globally.
+    """
+    n, d = x.shape
+    g, lmax = ids.shape
+    n_pad = (-n) % tile_n
+    xp = jnp.pad(x, ((0, n_pad), (0, 0)))
+    gn = xp.shape[0] // tile_n
+    mask = block_mask.astype(jnp.int32).reshape(gn, g)
+
+    best, idx, gmin, garg, gmin2 = pl.pallas_call(
+        functools.partial(_grouped_assign_kernel, lmax=lmax),
+        grid=(gn, g),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),        # mask
+            pl.BlockSpec((tile_n, d), lambda i, j: (i, 0)),   # x tile
+            pl.BlockSpec((1, lmax, d), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, lmax), lambda i, j: (j, 0)),     # ids
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n, 1), lambda i, j: (i, 0)),   # best
+            pl.BlockSpec((tile_n, 1), lambda i, j: (i, 0)),   # idx
+            pl.BlockSpec((tile_n, 1), lambda i, j: (i, j)),   # gmin
+            pl.BlockSpec((tile_n, 1), lambda i, j: (i, j)),   # garg
+            pl.BlockSpec((tile_n, 1), lambda i, j: (i, j)),   # gmin2
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((xp.shape[0], g), jnp.float32),
+            jax.ShapeDtypeStruct((xp.shape[0], g), jnp.int32),
+            jax.ShapeDtypeStruct((xp.shape[0], g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(mask, xp, c_grouped.astype(jnp.float32), ids.astype(jnp.int32))
+    return (best[:n, 0], idx[:n, 0], gmin[:n], garg[:n], gmin2[:n])

@@ -16,9 +16,11 @@ import jax.numpy as jnp
 from .centroid_update import centroid_update
 from .distance import pairwise_sq_dists
 from .filtered_assign import filtered_assign
+from .grouped_assign import grouped_assign
 
 __all__ = ["pairwise_sq_dists", "filtered_assign", "centroid_update",
-           "build_block_mask", "compact_indices", "filtered_assign_auto"]
+           "build_block_mask", "build_group_block_mask", "compact_indices",
+           "filtered_assign_auto", "grouped_assign"]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "tile_k"))
@@ -38,6 +40,20 @@ def build_block_mask(group_need: jnp.ndarray, groups: jnp.ndarray,
     gn, gk = cand.shape[0] // tile_n, cand.shape[1] // tile_k
     blocks = cand.reshape(gn, tile_n, gk, tile_k)
     return jnp.any(blocks, axis=(1, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def build_group_block_mask(group_need: jnp.ndarray, *,
+                           tile_n: int) -> jnp.ndarray:
+    """(N, G) per-point-per-group need -> (ceil(N/tile_n), G) bool mask
+    for the group-granular kernel (``grouped_assign``): block (i, g) is
+    live iff any point in tile i needs group g. Finer-grained than
+    ``build_block_mask`` — a group IS a centroid block, so the
+    group-level filter maps 1:1 onto skipped blocks."""
+    n, g = group_need.shape
+    n_pad = (-n) % tile_n
+    padded = jnp.pad(group_need, ((0, n_pad), (0, 0)))
+    return jnp.any(padded.reshape(-1, tile_n, g), axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("capacity",))

@@ -40,6 +40,38 @@ def filtered_assign_ref(x: jnp.ndarray, c: jnp.ndarray,
     return best, idx.astype(jnp.int32)
 
 
+def grouped_assign_ref(x, c_grouped, ids, block_mask, tile_n: int):
+    """Oracle for the group-granular block-skip kernel.
+
+    Mirrors ``grouped_assign``: per (point, group) returns
+    (min, argmin-id, second-min) of squared distances over the group's
+    valid slots, +inf/-1 for skipped blocks and padded slots; global
+    (best, idx) reduced over live groups only.
+    """
+    n = x.shape[0]
+    g, lmax, _ = c_grouped.shape
+    live = jnp.repeat(jnp.asarray(block_mask, bool), tile_n, axis=0)[:n]
+    d2 = pairwise_sq_dists_ref(
+        x, c_grouped.reshape(g * lmax, -1)).reshape(n, g, lmax)
+    d2 = jnp.where((ids >= 0)[None], d2, jnp.inf)
+    d2 = jnp.where(live[:, :, None], d2, jnp.inf)
+    gmin = jnp.min(d2, axis=2)
+    slot = jnp.argmin(d2, axis=2)
+    garg = jnp.take_along_axis(jnp.broadcast_to(ids[None], d2.shape),
+                               slot[..., None], 2)[..., 0]
+    eye = slot[..., None] == jnp.arange(lmax)[None, None]
+    gmin2 = jnp.min(jnp.where(eye, jnp.inf, d2), axis=2)
+    best = jnp.min(gmin, axis=1)
+    bg = jnp.argmin(gmin, axis=1)
+    idx = jnp.where(jnp.isfinite(best),
+                    jnp.take_along_axis(garg, bg[:, None], 1)[:, 0], -1)
+    gmin = jnp.where(live, gmin, jnp.inf)
+    garg = jnp.where(live, garg, -1)
+    gmin2 = jnp.where(live, gmin2, jnp.inf)
+    return (best, idx.astype(jnp.int32), gmin, garg.astype(jnp.int32),
+            gmin2)
+
+
 def centroid_update_ref(points: jnp.ndarray, assignments: jnp.ndarray,
                         k: int):
     """Segment sums + counts: (K, D) fp32 sums, (K,) fp32 counts."""

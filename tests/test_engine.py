@@ -1,0 +1,149 @@
+"""Device-resident engine: parity with Lloyd across every backend.
+
+The engine's contract is the paper's: filters (and their compacted /
+block-skipped realisations) change the WORK, never the RESULT. Each
+backend must land on Lloyd's fixed point — same assignments, same
+inertia — across ragged shapes, single-group (Hamerly) runs, and
+iterations where every candidate is filtered out.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KMeans, NotFittedError, kmeans_plusplus, lloyd,
+                        yinyang_compact)
+from repro.core import engine
+from repro.data import make_points
+
+BACKENDS = ["oracle", "compact", "pallas"]
+
+
+def _dataset(n, d, k, seed=0):
+    pts, _, _ = make_points(n, d, k, seed=seed)
+    pts = jnp.asarray(pts)
+    init = kmeans_plusplus(jax.random.PRNGKey(seed + 1), pts, k)
+    return pts, init
+
+
+def _assert_parity(r_e, r_l):
+    assert int(r_e.n_iters) == int(r_l.n_iters)
+    np.testing.assert_array_equal(np.asarray(r_e.assignments),
+                                  np.asarray(r_l.assignments))
+    np.testing.assert_allclose(float(r_e.inertia), float(r_l.inertia),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n,d,k,g", [
+    (1000, 8, 12, 3),     # N % tile_n != 0, K < tile_k
+    (513, 5, 7, 2),       # ragged everything
+    (768, 4, 8, 1),       # single group = Hamerly point-level filter
+    (2048, 12, 16, 16),   # one group per centroid
+])
+def test_engine_matches_lloyd(backend, n, d, k, g):
+    pts, init = _dataset(n, d, k)
+    r_l = lloyd(pts, init, max_iters=50, tol=1e-5)
+    r_e = engine.fit(pts, init, n_groups=g, max_iters=50, tol=1e-5,
+                     backend=backend, interpret=True, min_cap=64)
+    _assert_parity(r_e, r_l)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_zero_candidate_iterations(backend):
+    # tight, far-apart blobs: after the first assignment the filters
+    # eliminate every candidate while centroids still drift (shift>tol)
+    pts, _ = _dataset(600, 6, 4, seed=3)
+    pts = jnp.asarray(np.asarray(pts) * 0.01)
+    centers = jnp.asarray(
+        [[0.0] * 6, [100.0] * 6, [-100.0] * 6, [200.0] * 6], jnp.float32)
+    pts = pts + centers[jnp.arange(600) % 4]
+    init = centers + 0.5
+    r_l = lloyd(pts, init, max_iters=20, tol=1e-6)
+    r_e, stats = engine.fit(pts, init, n_groups=2, max_iters=20, tol=1e-6,
+                            backend=backend, interpret=True, min_cap=64,
+                            return_stats=True)
+    assert stats.n_iters > 1          # really iterated past the 0-cand step
+    _assert_parity(r_e, r_l)
+
+
+def test_engine_large_path_matches_lloyd():
+    # large enough to take the bucketed driver (not the fused small-N
+    # path) and to shift capacities at least once
+    pts, init = _dataset(6000, 16, 32)
+    r_l = lloyd(pts, init, max_iters=50, tol=1e-5)
+    r_e, stats = engine.fit(pts, init, n_groups=3, max_iters=50, tol=1e-5,
+                            backend="compact", min_cap=256,
+                            return_stats=True)
+    _assert_parity(r_e, r_l)
+    assert len(stats.caps_history) >= 2
+
+
+def test_engine_no_per_iteration_host_sync():
+    """The device-resident claim: host syncs scale with bucket
+    transitions (O(log N)), not with iterations."""
+    pts, init = _dataset(6000, 16, 32, seed=5)
+    r_e, stats = engine.fit(pts, init, n_groups=3, max_iters=50, tol=0.0,
+                            backend="compact", return_stats=True)
+    assert stats.n_iters > 5
+    assert stats.host_syncs < stats.n_iters
+    assert stats.host_syncs == len(stats.caps_history) + 1
+
+
+def test_engine_group_bucket_spill_is_exact():
+    """Force a cap_g the data exceeds: the in-pass lax.cond must spill
+    to the dense branch, never drop a surviving group."""
+    pts, init = _dataset(6000, 8, 24)
+    r_l = lloyd(pts, init, max_iters=40, tol=1e-5)
+    r_e = engine.fit(pts, init, n_groups=8, max_iters=40, tol=1e-5,
+                     backend="compact", max_bucket_switches=1)
+    _assert_parity(r_e, r_l)
+
+
+def test_engine_work_reduction():
+    pts, init = _dataset(6000, 16, 32)
+    r_l = lloyd(pts, init, max_iters=50, tol=1e-5)
+    r_e = engine.fit(pts, init, max_iters=50, tol=1e-5, backend="compact")
+    assert float(r_e.distance_evals) < 0.6 * float(r_l.distance_evals)
+
+
+def test_engine_through_kmeans_api():
+    pts, _ = _dataset(1500, 8, 8)
+    km_e = KMeans(n_clusters=8, engine="compact", seed=1).fit(pts)
+    km_r = KMeans(n_clusters=8, engine=None, seed=1).fit(pts)
+    np.testing.assert_array_equal(km_e.labels_, km_r.labels_)
+    np.testing.assert_allclose(km_e.inertia_, km_r.inertia_, rtol=1e-5)
+    km_h = KMeans(n_clusters=8, algorithm="hamerly", engine="compact",
+                  seed=1).fit(pts)
+    np.testing.assert_array_equal(km_h.labels_, km_r.labels_)
+
+
+def test_engine_auto_backend_resolves():
+    pts, init = _dataset(512, 4, 4)
+    r = engine.fit(pts, init, backend="auto", max_iters=10)
+    assert np.isfinite(float(r.inertia))
+    with pytest.raises(ValueError):
+        engine.fit(pts, init, backend="nope")
+
+
+def test_compact_wrapper_delegates_to_engine_math():
+    pts, init = _dataset(4000, 12, 24, seed=7)
+    r_l = lloyd(pts, init, max_iters=40, tol=1e-5)
+    r_c = yinyang_compact(pts, init, max_iters=40, tol=1e-5)
+    np.testing.assert_allclose(float(r_c.inertia), float(r_l.inertia),
+                               rtol=1e-5)
+
+
+def test_not_fitted_error():
+    km = KMeans(n_clusters=4)
+    for attr in ("cluster_centers_", "labels_", "inertia_", "n_iter_",
+                 "distance_evals_"):
+        with pytest.raises(NotFittedError):
+            getattr(km, attr)
+    with pytest.raises(NotFittedError):
+        km.predict(jnp.zeros((3, 2)))
+    # sklearn convention: still catchable as AttributeError/ValueError
+    with pytest.raises(AttributeError):
+        km.labels_
+    with pytest.raises(ValueError):
+        km.predict(jnp.zeros((3, 2)))

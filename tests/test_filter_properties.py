@@ -8,6 +8,10 @@ exact — filtered assignments always equal Lloyd's on arbitrary inputs.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import lloyd, yinyang

@@ -5,11 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (build_block_mask, centroid_update,
-                           compact_indices, filtered_assign,
-                           filtered_assign_auto, pairwise_sq_dists)
+from repro.kernels import (build_block_mask, build_group_block_mask,
+                           centroid_update, compact_indices,
+                           filtered_assign, filtered_assign_auto,
+                           grouped_assign, pairwise_sq_dists)
 from repro.kernels.ref import (centroid_update_ref, filtered_assign_ref,
-                               pairwise_sq_dists_ref)
+                               grouped_assign_ref, pairwise_sq_dists_ref)
 
 SHAPES = [  # (n, d, k) including non-aligned sizes that exercise padding
     (256, 16, 128), (1000, 48, 300), (130, 7, 17), (512, 128, 128),
@@ -48,6 +49,50 @@ def test_filtered_assign_block_skip(n, d, k, density):
                                atol=1e-5)
     assert (~finite == (np.asarray(idx) == -1)).all()
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(iref))
+
+
+@pytest.mark.parametrize("n,d,k,g,tile_n,density", [
+    (300, 7, 17, 4, 128, 0.5),    # ragged N/K, partial skip
+    (512, 16, 64, 8, 256, 1.0),   # aligned, fully dense
+    (1000, 12, 40, 5, 256, 0.3),  # mostly skipped
+    (130, 3, 6, 6, 64, 0.0),      # everything skipped
+])
+def test_grouped_assign_matches_ref(n, d, k, g, tile_n, density):
+    kx, kc, kg, km = jax.random.split(jax.random.PRNGKey(n + k), 4)
+    x = jax.random.normal(kx, (n, d))
+    c = jax.random.normal(kc, (k, d))
+    groups = np.asarray(jax.random.randint(kg, (k,), 0, g))
+    lmax = max(int(np.bincount(groups, minlength=g).max()), 1)
+    members = np.full((g, lmax), -1, np.int32)
+    for gg in range(g):
+        ids = np.nonzero(groups == gg)[0]
+        members[gg, :len(ids)] = ids
+    ids = jnp.asarray(members)
+    c_grouped = c[jnp.maximum(ids, 0)]
+    gn = -(-n // tile_n)
+    mask = jax.random.bernoulli(km, density, (gn, g))
+    got = grouped_assign(x, c_grouped, ids, mask, tile_n=tile_n,
+                         interpret=True)
+    want = grouped_assign_ref(x, c_grouped, ids, mask, tile_n)
+    for name, a, b in zip(("best", "idx", "gmin", "garg", "gmin2"),
+                          got, want):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype.kind == "f":
+            finite = np.isfinite(b)
+            assert (np.isfinite(a) == finite).all(), name
+            np.testing.assert_allclose(a[finite], b[finite], rtol=1e-5,
+                                       atol=1e-5, err_msg=name)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+def test_group_block_mask_construction():
+    need = jnp.zeros((600, 4), bool).at[300:, 1].set(True)
+    mask = build_group_block_mask(need, tile_n=256)
+    # rows 300.. span tiles 1 and 2 only; they need group 1 only
+    expected = np.zeros((3, 4), bool)
+    expected[1:, 1] = True
+    np.testing.assert_array_equal(np.asarray(mask), expected)
 
 
 @pytest.mark.parametrize("n,d,k", SHAPES)

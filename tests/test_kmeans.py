@@ -96,6 +96,39 @@ def test_empty_cluster_keeps_previous_centroid():
                                   np.asarray(r_y.assignments))
 
 
+def test_distance_evals_counter_is_precision_safe():
+    """Regression: a bare fp32 accumulator silently drops increments
+    once the total passes 2^24 (one paper-scale iteration adds N*K ~
+    10^8). The compensated EvalCount pair must keep exact integer
+    counts far beyond that."""
+    from repro.core import EvalCount
+
+    naive = jnp.float32(2 ** 24)
+    c = EvalCount.of(2 ** 24)
+    for _ in range(64):
+        naive = naive + jnp.float32(1.0)
+        c = c.add(1.0)
+    assert float(naive) == 2 ** 24          # the bug: +1 x64 vanished
+    assert float(c.total()) == 2 ** 24 + 64
+
+    # paper-scale accumulation: 50 iterations of N*K = 2^27 evals
+    c = EvalCount.of(0)
+    for _ in range(50):
+        c = c.add(jnp.float32(2 ** 27))
+    assert float(c.total()) == 50 * 2 ** 27
+
+    # odd increments force rounding on almost every add; the (hi, lo)
+    # pair must still hold the exact integer (total() rounds once)
+    @jax.jit
+    def accumulate(c0):
+        def body(_, c):
+            return c.add(2 ** 24 - 1)
+        return jax.lax.fori_loop(0, 100, body, c0)
+    c = accumulate(EvalCount.of(0))
+    exact = np.float64(np.asarray(c.hi)) + np.float64(np.asarray(c.lo))
+    assert exact == 100 * (2 ** 24 - 1)
+
+
 def test_compact_path_matches_lloyd():
     from repro.core import yinyang_compact
     pts, init, k = _dataset(n=4000, k=24, seed=7)

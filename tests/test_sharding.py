@@ -62,7 +62,10 @@ def test_train_state_specs_mirror_params():
 
 def test_cache_specs_batch_vs_seq_sharding():
     cfg = get_config("qwen2-7b")
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    try:
+        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:  # jax<=0.4.x: shape_tuple of (name, size) pairs
+        mesh = jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
     big = cache_pspecs(cfg, mesh, batch=128)
     small = cache_pspecs(cfg, mesh, batch=1)
     # batch >= data parallelism: batch dim sharded, seq on model
