@@ -91,14 +91,26 @@ def summarize(rows):
     }
 
 
-def write_json(rows, path="BENCH_kmeans.json"):
+def write_json(rows, path="BENCH_kmeans.json", scale=1.0):
     """Machine-readable perf record so the trajectory is tracked
-    across PRs (consumed by CI / later sessions)."""
-    payload = {"datasets": [
+    across PRs (consumed by CI via ``benchmarks/run.py --check`` and by
+    later sessions). Preserves the ``streaming`` section owned by
+    ``streaming_bench.py``. ``scale`` is recorded so the --check gate
+    can re-measure at the SAME problem sizes (speedups at different n
+    are incommensurable: tiny problems auto-route to Lloyd)."""
+    payload = {}
+    try:
+        with open(path) as fh:
+            payload = {k: v for k, v in json.load(fh).items()
+                       if k == "streaming"}
+    except (FileNotFoundError, ValueError):
+        pass
+    payload["scale"] = scale
+    payload["datasets"] = [
         {key: r[key] for key in ("dataset", "n", "d", "k", "iters",
                                  "lloyd_ms", "oracle_ms", "compact_ms",
                                  "engine_ms", "speedup", "work_reduction")}
-        for r in rows]}
+        for r in rows]
     payload.update(summarize(rows))
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2)
@@ -120,7 +132,7 @@ def main(scale=1.0, limit=None, json_path=None):
           f"compact_mean={s['mean_speedup_compact']:.2f}x "
           f"work_red_mean={s['mean_work_reduction']:.2f}x")
     if json_path:
-        write_json(rows, json_path)
+        write_json(rows, json_path, scale=scale)
     return rows
 
 

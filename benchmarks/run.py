@@ -1,31 +1,85 @@
 """Benchmark harness: one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
+  PYTHONPATH=src python -m benchmarks.run --check        # CI perf gate
 
 Prints ``name,us_per_call,derived`` CSV per line, and writes the
 K-means perf record to ``BENCH_kmeans.json`` (per-dataset ``lloyd_ms``,
-``engine_ms``, ``speedup``, ``work_reduction`` + suite means) so the
-perf trajectory is tracked across PRs.
+``engine_ms``, ``speedup``, ``work_reduction`` + suite means, plus the
+``streaming`` subsystem record) so the perf trajectory is tracked
+across PRs.
+
+``--check`` is the regression gate: it re-measures the quick suite and
+compares ``mean_speedup`` against the committed record (within
+``--check-tolerance``, timing noise being what it is) and requires the
+streaming fit's inertia gap to stay within 5% of the batch engine.
+Exit code 1 on regression — CI-invocable.
 """
 import argparse
 import sys
+
+
+def check(args) -> None:
+    import json
+
+    from . import kmeans_speedup, streaming_bench
+
+    try:
+        with open(args.json) as fh:
+            committed = json.load(fh)
+    except FileNotFoundError:
+        print(f"check: no committed record at {args.json}; run the "
+              f"benchmark first", file=sys.stderr)
+        sys.exit(2)
+
+    # re-measure at the committed record's scale: speedups at different
+    # problem sizes are incommensurable (tiny fits auto-route to Lloyd)
+    scale = committed.get("scale", 0.1)
+    rows = kmeans_speedup.run(scale=scale)
+    fresh = kmeans_speedup.summarize(rows)["mean_speedup"]
+    ref = committed["mean_speedup"]
+    floor = ref * args.check_tolerance
+    speed_ok = fresh >= floor
+    print(f"check: mean_speedup fresh={fresh:.3f} committed={ref:.3f} "
+          f"(scale={scale}) floor={floor:.3f} -> "
+          f"{'OK' if speed_ok else 'REGRESSION'}")
+
+    srow = streaming_bench.run(scale=scale, epochs=3)
+    gap_ok = srow["inertia_gap"] <= 0.05
+    print(f"check: streaming inertia_gap={srow['inertia_gap'] * 100:+.2f}% "
+          f"(limit +5%) -> {'OK' if gap_ok else 'REGRESSION'}")
+    sys.exit(0 if speed_ok and gap_ok else 1)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller problem sizes (CI-friendly)")
-    ap.add_argument("--json", default="BENCH_kmeans.json",
+    ap.add_argument("--json", "--out", dest="json",
+                    default="BENCH_kmeans.json",
                     help="path for the machine-readable K-means record "
                          "('' disables)")
+    ap.add_argument("--check", action="store_true",
+                    help="perf regression gate: compare fresh --quick "
+                         "results against the committed record; exit 1 "
+                         "on regression")
+    ap.add_argument("--check-tolerance", type=float, default=0.6,
+                    help="--check fails when fresh mean_speedup drops "
+                         "below committed * this factor (default 0.6 — "
+                         "shared-CI timing noise is large)")
     args = ap.parse_args()
+    if args.check:
+        check(args)
+        return
     scale = 0.1 if args.quick else 1.0
 
     from . import filter_efficiency, group_sweep, kernel_bench
-    from . import kmeans_speedup, roofline_report
+    from . import kmeans_speedup, roofline_report, streaming_bench
 
     print("# === paper Table: KPynq vs standard K-means ===", flush=True)
     kmeans_speedup.main(scale=scale, json_path=args.json or None)
+    print("# === streaming / mini-batch subsystem ===", flush=True)
+    streaming_bench.main(scale=scale, json_path=args.json or None)
     print("# === filter efficiency (multi-level filter rates) ===",
           flush=True)
     filter_efficiency.main()

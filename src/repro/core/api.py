@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import engine as _engine
 from . import kmeans as _km
@@ -37,15 +38,20 @@ class KMeans:
         algorithms through the device-resident execution engine
         (:mod:`repro.core.engine`), which realises both filter levels
         as skipped work — 'auto' picks the Pallas block-skip kernel on
-        TPU and two-level stream compaction elsewhere. Results are
-        identical either way; only the wall-clock changes. Ignored for
-        ``algorithm='lloyd'`` (there is nothing to filter).
+        TPU and two-level stream compaction elsewhere, EXCEPT tiny
+        problems (``n * k <= engine.AUTO_LLOYD_MAX_WORK``), which it
+        routes straight to the dense Lloyd loop (measurably faster
+        there; same fixed point). Results are identical either way;
+        only the wall-clock changes. Ignored for ``algorithm='lloyd'``
+        (there is nothing to filter).
+    decay : per-batch count decay for the STREAMING path (see
+        :meth:`partial_fit`); unused by :meth:`fit`.
     """
 
     def __init__(self, n_clusters: int, algorithm: str = "yinyang",
                  n_groups: int | None = None, init: str = "k-means++",
                  max_iters: int = 100, tol: float = 1e-4, seed: int = 0,
-                 engine: str | None = None):
+                 engine: str | None = None, decay: float = 1.0):
         if algorithm not in ("lloyd", "hamerly", "yinyang"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
         if engine is not None and engine != "auto" \
@@ -61,7 +67,9 @@ class KMeans:
         self.tol = tol
         self.seed = seed
         self.engine = engine
+        self.decay = decay
         self.result_: _km.KMeansResult | None = None
+        self._stream = None
 
     def _init_centroids(self, points):
         key = jax.random.PRNGKey(self.seed)
@@ -84,6 +92,49 @@ class KMeans:
                                   max_iters=self.max_iters, tol=self.tol,
                                   backend=self.engine)
         self.result_ = jax.tree.map(jax.device_get, res)
+        self._stream = None       # a batch fit supersedes any stream state
+        return self
+
+    def partial_fit(self, points, shard_id=None) -> "KMeans":
+        """Streaming mini-batch update (delegates to
+        :class:`repro.streaming.StreamingKMeans`).
+
+        Feed point shards one at a time; each batch runs the engine's
+        two-level-filtered candidate pass against the current centroids
+        and applies a decayed count-weighted (EMA) centroid update.
+        ``shard_id`` (any hashable) keys the carried-bounds cache: pass
+        it when the same points will be re-presented (e.g. epochs over
+        a :class:`repro.data.PointStream`), so triangle-inequality
+        bounds survive across batches and skip most distance work on
+        revisits.
+
+        Decay schedule: effective per-centroid counts are multiplied by
+        ``self.decay`` before each update. ``decay=1.0`` is pure
+        count-weighting (per-centroid 1/n learning rate — converges to
+        the batch fit on stationary streams); ``decay<1`` forgets with
+        a ~``1/(1-decay)``-batch horizon (for drifting streams).
+
+        The first call(s) may only BUFFER points (k-means++ cold-start
+        over the first shards); accessors raise ``NotFittedError``
+        until enough points arrived. Afterwards ``cluster_centers_``
+        etc. track the running stream state; ``inertia_`` is the EWA
+        per-point batch cost (an upper-bound estimate), not full-data
+        inertia, and ``n_iter_`` counts batches.
+        """
+        from .. import streaming as _streaming
+        if self._stream is None:
+            n_groups = 1 if self.algorithm in ("lloyd", "hamerly") \
+                else self.n_groups
+            self._stream = _streaming.StreamingKMeans(
+                self.n_clusters, n_groups=n_groups, init=self.init,
+                decay=self.decay, seed=self.seed)
+        s = self._stream.partial_fit(points, shard_id=shard_id)
+        if s.initialized:
+            self.result_ = _km.KMeansResult(
+                s.cluster_centers_, s.labels_,
+                np.int32(s.stats_.batches),
+                np.float32(s.stats_.distance_evals),
+                np.float32(s.ewa_inertia_))
         return self
 
     def _fitted(self) -> _km.KMeansResult:

@@ -33,7 +33,10 @@ Backend selection (``backend=`` on :func:`fit`):
     skipping whole (tile_n x group) blocks is free.
 ``"auto"``
     ``"pallas"`` when ``jax.default_backend() == "tpu"``, else
-    ``"compact"``.
+    ``"compact"`` — EXCEPT tiny problems (``n * k <=
+    AUTO_LLOYD_MAX_WORK``), which route straight to the reference
+    Lloyd loop: below that size one dense GEMM per iteration beats any
+    filter bookkeeping (measured in ``BENCH_kmeans.json``, uci-small).
 
 Every backend is exact: fixed points are identical to Lloyd's
 (``tests/test_engine.py`` checks assignments/inertia parity across the
@@ -54,9 +57,25 @@ import numpy as np
 
 from .distances import pairwise_dists, pairwise_sq_dists, rowwise_dists
 from .kmeans import (EvalCount, KMeansResult, _init_filter_state,
-                     centroid_sums, centroids_from_sums, group_centroids)
+                     centroid_sums, centroids_from_sums, group_centroids,
+                     lloyd)
 
 BACKENDS = ("oracle", "compact", "pallas")
+
+# backend="auto" routes problems with n*k at or below this straight to
+# the reference Lloyd loop: BENCH_kmeans.json shows the dense (N, K)
+# GEMM beating the filtered engine by ~3.6x at uci-small scale (n=512,
+# k=32 -> n*k=16384) — at that size one fused matmul per iteration is
+# cheaper than any bound bookkeeping. The fixed point is identical
+# (tests/test_engine.py parity matrix), only distance_evals differ.
+AUTO_LLOYD_MAX_WORK = 1 << 17
+
+# jit-cached Lloyd for the tiny-problem route: calling the bare
+# function would re-trace its while_loop on every fit, costing more
+# than the fit itself at these sizes
+_lloyd_jit = functools.partial(jax.jit, static_argnames=(
+    "max_iters", "tol"))(lambda points, init_c, *, max_iters, tol:
+                         lloyd(points, init_c, max_iters, tol))
 
 
 # --------------------------------------------------------------------------
@@ -479,6 +498,18 @@ def _bucket_cap(count: int, floor: int, ceil: int) -> int:
     return max(min(cap, ceil), min(floor, ceil))
 
 
+def build_group_tables(groups_np: np.ndarray, n_groups: int):
+    """Host-side group tables: (G, Lmax) -1-padded membership matrix +
+    fp32 group sizes. Shared by the batch fit and the streaming step."""
+    counts = np.bincount(groups_np, minlength=n_groups)
+    l_max = max(int(counts.max()), 1)
+    members_np = np.full((n_groups, l_max), -1, np.int32)
+    for g in range(n_groups):
+        ids = np.nonzero(groups_np == g)[0]
+        members_np[g, :len(ids)] = ids
+    return jnp.asarray(members_np), jnp.asarray(counts.astype(np.float32))
+
+
 def fit(points, init_centroids, *, n_groups: int | None = None,
         max_iters: int = 100, tol: float = 1e-4, backend: str = "auto",
         tile_n: int = 256, min_cap: int = 256, chunk: int = 2048,
@@ -492,17 +523,23 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     :class:`~repro.core.kmeans.KMeansResult`; with
     ``return_stats=True`` returns ``(result, EngineStats)``.
     """
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "compact"
-    if backend not in BACKENDS:
+    if backend not in BACKENDS + ("auto",):
         raise ValueError(f"unknown engine backend {backend!r}; "
                          f"expected one of {BACKENDS + ('auto',)}")
-    if interpret is None:
-        interpret = backend == "pallas" and jax.default_backend() != "tpu"
     points = jnp.asarray(points)
     init_c = jnp.asarray(init_centroids, jnp.float32)
     k = init_c.shape[0]
     n = points.shape[0]
+    if backend == "auto":
+        if n * k <= AUTO_LLOYD_MAX_WORK:
+            res = _lloyd_jit(points, init_c, max_iters=int(max_iters),
+                             tol=float(tol))
+            stats = EngineStats(backend="lloyd", n_iters=int(res.n_iters),
+                                host_syncs=1)
+            return (res, stats) if return_stats else res
+        backend = "pallas" if jax.default_backend() == "tpu" else "compact"
+    if interpret is None:
+        interpret = backend == "pallas" and jax.default_backend() != "tpu"
     if n_groups is None:
         n_groups = max(k // 10, 1)
     n_groups = int(min(n_groups, k))
@@ -527,14 +564,7 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     # group membership table (G, Lmax), -1-padded; one setup-time sync
     groups_np = np.asarray(jax.device_get(groups))
     stats.host_syncs += 1
-    counts = np.bincount(groups_np, minlength=n_groups)
-    l_max = max(int(counts.max()), 1)
-    members_np = np.full((n_groups, l_max), -1, np.int32)
-    for g in range(n_groups):
-        ids = np.nonzero(groups_np == g)[0]
-        members_np[g, :len(ids)] = ids
-    members = jnp.asarray(members_np)
-    gsize = jnp.asarray(counts.astype(np.float32))
+    members, gsize = build_group_tables(groups_np, n_groups)
 
     state0 = _init_filter_state(points, init_c, groups, n_groups)
     carry = EngineCarry(
@@ -591,3 +621,94 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     if return_stats:
         return result, stats
     return result
+
+
+# --------------------------------------------------------------------------
+# streaming / mini-batch single-pass step (driven by repro.streaming)
+# --------------------------------------------------------------------------
+
+class StreamStepOut(NamedTuple):
+    """Outputs of one mini-batch :func:`stream_update` step. The
+    returned ``ub``/``lb`` are already decayed by this step's centroid
+    drift, i.e. valid against the RETURNED centroids — exactly what the
+    caller's per-shard bound cache wants to store."""
+    centroids: jnp.ndarray    # (K, D) after the decayed update
+    counts: jnp.ndarray       # (K,) decayed effective counts
+    assignments: jnp.ndarray  # (B,)
+    ub: jnp.ndarray           # (B,) post-move upper bounds
+    lb: jnp.ndarray           # (B, G) post-move lower bounds
+    pairs: jnp.ndarray        # f32: point-centroid pairs scored
+    gmax: jnp.ndarray         # int32: surviving-group high-water
+    drift: jnp.ndarray        # (K,) this step's per-centroid drift
+    gdrift: jnp.ndarray       # (G,) this step's per-group max drift
+    batch_counts: jnp.ndarray  # (K,) points of THIS batch per centroid
+    batch_cost: jnp.ndarray   # f32 sum(ub^2) pre-move: an upper-bound
+                              # estimate of the batch's inertia
+
+
+@jax.jit
+def stream_bounds(points, centroids, assignments, ub, lb):
+    """Point-level filter over CARRIED (drift-inflated) bounds — the
+    first half of ``move_and_bounds`` without the centroid move. ``ub``
+    must upper-bound d(x, centroids[assignments]) and ``lb`` must
+    lower-bound the per-group min excluding the assignment (the shard
+    cache's :func:`repro.streaming.inflate_bounds` contract).
+
+    Returns ``(ub_t, need, n_cand, n_tightened)``: tightened upper
+    bounds, the pending candidate mask, its popcount, and how many
+    exact own-centroid distances were spent tightening.
+    """
+    glb = jnp.min(lb, axis=1)
+    maybe = ub > glb
+    d_own = rowwise_dists(points, centroids[assignments])
+    ub_t = jnp.where(maybe, d_own, ub)
+    need = ub_t > glb
+    return ub_t, need, jnp.sum(need.astype(jnp.int32)), jnp.sum(
+        maybe.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "n_groups", "cap_n", "cap_g", "chunk"))
+def stream_update(points, centroids, counts, decay, groups, members, gsize,
+                  assignments, ub_t, lb, need, *, k, n_groups, cap_n,
+                  cap_g, chunk=2048):
+    """One mini-batch against EXTERNAL carry (centroids + effective
+    counts): the engine's two-level compacted candidate pass, then a
+    decayed count-weighted centroid update, then post-move bound decay.
+
+    This is the reusable single-pass step behind
+    :class:`repro.streaming.StreamingKMeans`. The update is the
+    mini-batch EMA ``c <- (decay * n_c * c + sum_batch) / (decay * n_c
+    + b_c)``: ``decay=1`` is pure count-weighting (per-centroid 1/n
+    learning rate), ``decay<1`` caps the memory at ~1/(1-decay)
+    batches. ``cap_n`` MUST be >= the candidate count (the caller syncs
+    it via :func:`stream_bounds`); ``cap_g`` is a guess — the pass's
+    ``lax.cond`` spills to the dense branch when it is exceeded, and
+    the returned ``gmax`` recalibrates the next visit.
+    """
+    new_as, nub, nlb, pairs, gmax = compact_candidate_pass(
+        points, centroids, assignments, ub_t, lb, groups, members, gsize,
+        need, cap_n=cap_n, cap_g=cap_g, n_groups=n_groups, chunk=chunk,
+        opt_sq=True)
+    bsums, bcounts = centroid_sums(points, new_as, k)
+
+    dec = counts * decay
+    new_counts = dec + bcounts
+    sums = dec[:, None] * centroids + bsums
+    # fractional decayed counts: guard with an epsilon, not the batch
+    # fit's max(counts, 1) (which assumes integer counts)
+    new_c = jnp.where(new_counts[:, None] > 1e-6,
+                      sums / jnp.maximum(new_counts, 1e-6)[:, None],
+                      centroids)
+
+    drift = jnp.linalg.norm(new_c - centroids, axis=-1)
+    # clamp: segment_max of an EMPTY group is -inf, which the batch
+    # loop tolerates but would poison the caller's cumulative drift
+    # ledger (inf - inf = NaN on the next inflation)
+    gdrift = jnp.maximum(
+        jax.ops.segment_max(drift, groups, num_segments=n_groups), 0.0)
+    out_ub = nub + drift[new_as]
+    out_lb = jnp.maximum(nlb - gdrift[None, :], 0.0)
+    return StreamStepOut(new_c, new_counts, new_as, out_ub, out_lb,
+                         pairs, gmax, drift, gdrift, bcounts,
+                         jnp.sum(nub * nub))

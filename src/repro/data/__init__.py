@@ -1,4 +1,6 @@
 """Data pipelines."""
-from .pipeline import PrefetchingLoader, TokenPipeline, make_points
+from .pipeline import (PointStream, PrefetchingLoader, TokenPipeline,
+                       make_points)
 
-__all__ = ["TokenPipeline", "PrefetchingLoader", "make_points"]
+__all__ = ["TokenPipeline", "PrefetchingLoader", "PointStream",
+           "make_points"]

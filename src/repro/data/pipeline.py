@@ -81,6 +81,93 @@ class PrefetchingLoader:
             pass
 
 
+class PointStream:
+    """Sharded point stream for the streaming K-means fit.
+
+    Same determinism contract as :class:`TokenPipeline`: synthetic
+    shard ``s`` is generated from ``rng((seed, s))``, so it is
+    bit-identical on every epoch and every host — which is exactly what
+    lets ``repro.streaming.StreamingKMeans`` key its carried-bounds
+    cache on the shard id, and what makes restart-from-step need no
+    loader state. ``data=`` instead wraps an existing (N, D) array —
+    including an ``np.load(..., mmap_mode='r')`` memmap, the
+    file-backed path — sliced into contiguous shards (the last shard
+    may be short).
+
+    ``global_batch(step)`` speaks the :class:`PrefetchingLoader`
+    protocol (epochs wrap via ``step % n_shards``), so a device-put
+    prefetch thread comes for free::
+
+        loader = PrefetchingLoader(stream, None)
+        skm.fit_stream(iter(loader.__next__, None), max_batches=...)
+    """
+
+    def __init__(self, shard_size: int = 1024, *, n_shards: int | None = None,
+                 n_dims: int | None = None, k: int | None = None,
+                 data: np.ndarray | None = None, seed: int = 0,
+                 cluster_std: float = 1.0, spread: float = 8.0):
+        if shard_size <= 0:
+            raise ValueError("shard_size must be positive")
+        self.shard_size = int(shard_size)
+        self.seed = seed
+        self.data = data
+        if data is not None:
+            if data.ndim != 2 or len(data) == 0:
+                raise ValueError("data must be a non-empty (N, D) array")
+            self.n_shards = -(-len(data) // self.shard_size)
+            self.n_dims = data.shape[1]
+        else:
+            if not (n_shards and n_dims and k):
+                raise ValueError(
+                    "synthetic stream needs n_shards, n_dims and k")
+            self.n_shards = int(n_shards)
+            self.n_dims = int(n_dims)
+            self.k = int(k)
+            self.cluster_std = cluster_std
+            # centers drawn once from (seed, 0); shard s from (seed, s+1)
+            rng = np.random.default_rng((seed, 0))
+            self._centers = rng.standard_normal(
+                (self.k, self.n_dims)).astype(np.float32) * spread
+
+    @classmethod
+    def from_npy(cls, path: str, shard_size: int = 1024) -> "PointStream":
+        """File-backed stream over a .npy array without loading it."""
+        return cls(shard_size, data=np.load(path, mmap_mode="r"))
+
+    @property
+    def n_points(self) -> int:
+        if self.data is not None:
+            return len(self.data)
+        return self.n_shards * self.shard_size
+
+    def __len__(self) -> int:
+        return self.n_shards
+
+    def shard(self, idx: int) -> np.ndarray:
+        """Shard ``idx`` (wraps modulo n_shards) as (B, D) float32."""
+        idx = int(idx) % self.n_shards
+        if self.data is not None:
+            lo = idx * self.shard_size
+            return np.asarray(self.data[lo:lo + self.shard_size],
+                              np.float32)
+        rng = np.random.default_rng((self.seed, idx + 1))
+        assign = rng.integers(0, self.k, size=self.shard_size)
+        pts = self._centers[assign] + rng.standard_normal(
+            (self.shard_size, self.n_dims)).astype(np.float32) \
+            * self.cluster_std
+        return pts.astype(np.float32)
+
+    def batches(self, epochs: int = 1):
+        """Yield ``(shard_id, points)`` over ``epochs`` full passes."""
+        for _ in range(max(int(epochs), 1)):
+            for s in range(self.n_shards):
+                yield s, self.shard(s)
+
+    def global_batch(self, step: int) -> dict:
+        s = step % self.n_shards
+        return {"shard_id": s, "points": self.shard(s)}
+
+
 def make_points(n: int, d: int, k: int, seed: int = 0,
                 cluster_std: float = 1.0, spread: float = 8.0):
     """Gaussian-blob point cloud with ground-truth structure (the

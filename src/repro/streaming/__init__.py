@@ -1,0 +1,14 @@
+"""Streaming / mini-batch K-means on the device-resident engine.
+
+``StreamingKMeans.partial_fit`` feeds point shards through the engine's
+two-level-filtered candidate pass with triangle-inequality bounds
+CARRIED across batches (see ``estimator.py`` for the full design).
+"""
+from .estimator import StreamingKMeans
+from .state import (BoundCache, DriftLedger, ShardBounds, StreamStats,
+                    inflate_bounds)
+
+__all__ = [
+    "StreamingKMeans", "StreamStats", "ShardBounds", "DriftLedger",
+    "BoundCache", "inflate_bounds",
+]

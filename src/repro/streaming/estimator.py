@@ -1,0 +1,405 @@
+"""StreamingKMeans: bound-carrying mini-batch K-means on the
+device-resident engine.
+
+The batch engine (``repro.core.engine``) realises KPynq's two filter
+levels as skipped work inside one fit; this estimator extends the same
+candidate pass to point streams that never fit in memory at once:
+
+1. **Ingest** — ``partial_fit(batch, shard_id=...)`` or
+   ``fit_stream(PointStream, epochs=...)``. A shard id is a promise
+   that the same id always carries the same points (which the
+   deterministic ``(seed, shard)`` generation in
+   :class:`repro.data.PointStream` keeps for free).
+2. **Bound carry** — on a shard revisit the cached filter state is
+   re-validated by :func:`inflate_bounds` (upper bounds grow by each
+   point's assigned-centroid drift accumulated in the
+   :class:`DriftLedger`; group lower bounds shrink by their group's
+   max drift), then the engine's point-level filter
+   (:func:`repro.core.engine.stream_bounds`) decides which points need
+   distance work at all. First visits run with vacuous bounds —
+   exactly the batch fit's first-iteration semantics.
+3. **Candidate pass + update** —
+   :func:`repro.core.engine.stream_update`: the engine's
+   capacity-bucketed two-level compacted candidate pass (point
+   survivors stream-compacted into a pow2 bucket sized from the synced
+   candidate count; the group bucket sized from the shard's last-visit
+   high-water with the engine's ``lax.cond`` dense spill), then the
+   decayed count-weighted centroid EMA, then post-move bound decay so
+   the stored cache entry is valid against the new centroids. No dense
+   (N, K) distance matrix is ever built in this path.
+4. **Upkeep** — drift ledger accumulation, dead-centroid patience +
+   re-seeding from a far-point reservoir, EWA inertia estimate, and
+   :class:`StreamStats` (batches, distance evals, cache hits/misses,
+   drift resets, reseeds).
+
+Decay schedule: effective per-centroid counts are multiplied by
+``decay`` before each update. ``decay=1.0`` (default) is Sculley-style
+pure count-weighting — the learning rate for centroid c decays as
+1/n_c, the right choice for stationary streams and for converging to
+the batch fit (``tests/test_streaming.py`` checks the inertia gap).
+``decay<1`` caps the memory at roughly ``1/(1-decay)`` batches per
+centroid — the right choice for drifting streams, at the cost of a
+noise floor.
+
+Cold start: batches are buffered until ``init_size`` points (default
+``2 * n_clusters``; raise it to seed from several shards) are
+available, then centroids are seeded by k-means++ over the buffer,
+centroid groups are built once (they stay fixed; drift handles all
+subsequent movement), and the buffered batches are replayed through
+the normal step so their bounds enter the cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import engine as _engine
+from ..core.api import NotFittedError
+from ..core.engine import _bucket_cap, compact_candidate_pass
+from ..core.init import kmeans_plusplus, random_init
+from ..core.kmeans import group_centroids
+from .state import (BoundCache, DriftLedger, ShardBounds, StreamStats,
+                    inflate_bounds)
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "cap_n"))
+def _assign_fresh(points, centroids, groups, members, gsize, *, n_groups,
+                  cap_n):
+    """Exact nearest-centroid assignment through the engine's candidate
+    pass with vacuous bounds (used by predict / inertia_of — keeps even
+    inference on the no-dense-matrix path)."""
+    b = points.shape[0]
+    a0 = jnp.zeros((b,), jnp.int32)
+    ub = jnp.full((b,), jnp.inf, jnp.float32)
+    lb = jnp.zeros((b, n_groups), jnp.float32)
+    need = jnp.ones((b,), bool)
+    nas, nub, _, pairs, _ = compact_candidate_pass(
+        points, centroids, a0, ub, lb, groups, members, gsize, need,
+        cap_n=cap_n, cap_g=n_groups, n_groups=n_groups, opt_sq=True)
+    return nas, nub, pairs
+
+
+class StreamingKMeans:
+    """sklearn-style streaming K-means estimator (see module docstring).
+
+    Parameters
+    ----------
+    n_clusters : K
+    n_groups : Yinyang group count (default K//10; 1 = Hamerly filter)
+    init : 'k-means++' | 'random' — seeding over the cold-start buffer
+    decay : count decay per batch (1.0 = pure count-weighting)
+    init_size : points buffered before seeding (default 2*K)
+    min_bucket : floor of the pow2 candidate-capacity lattice
+    max_cached_shards : LRU size of the per-shard bound cache
+    reseed_patience : full stream passes (distinct-shards-seen worth of
+        batches) without points before a centroid is re-seeded from the
+        far-point reservoir — scaled this way so a centroid served by a
+        shard late in a long epoch is not declared dead mid-pass
+    drift_reset_factor : drop a cached shard when accumulated group
+        drift exceeds this multiple of its stored mean ub (bounds still
+        valid, just vacuous — recomputing beats carrying them)
+    """
+
+    def __init__(self, n_clusters: int, *, n_groups: int | None = None,
+                 init: str = "k-means++", decay: float = 1.0,
+                 init_size: int | None = None, seed: int = 0,
+                 min_bucket: int = 256, max_cached_shards: int = 256,
+                 reseed_patience: int = 20,
+                 drift_reset_factor: float = 8.0, chunk: int = 2048):
+        if init not in ("k-means++", "random"):
+            raise ValueError(f"unknown init {init!r}")
+        if not 0.0 < decay <= 1.0:
+            raise ValueError("decay must be in (0, 1]")
+        self.n_clusters = int(n_clusters)
+        self.n_groups = n_groups
+        self.init = init
+        self.decay = float(decay)
+        self.init_size = init_size
+        self.seed = seed
+        self.min_bucket = int(min_bucket)
+        self.reseed_patience = int(reseed_patience)
+        self.drift_reset_factor = float(drift_reset_factor)
+        self.chunk = int(chunk)
+
+        self.stats_ = StreamStats()
+        self.ewa_inertia_: float | None = None
+        self._ewa_alpha = 0.25
+        self._centroids = None            # (K, D) device array once live
+        self._counts = None               # (K,) device array
+        self._buffer: list = []           # [(shard_id, np points)] pre-init
+        self._buffered = 0
+        self._cache = BoundCache(max_cached_shards)
+        self._ledger: DriftLedger | None = None
+        self._labels_last: np.ndarray | None = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def initialized(self) -> bool:
+        return self._centroids is not None
+
+    def _require_fitted(self):
+        if not self.initialized:
+            raise NotFittedError(
+                "This StreamingKMeans instance has no centroids yet; "
+                "call partial_fit()/fit_stream() (enough points to cover "
+                "init_size) first.")
+
+    def _resolved_groups(self) -> int:
+        g = self.n_groups
+        if g is None:
+            g = max(self.n_clusters // 10, 1)
+        return int(min(g, self.n_clusters))
+
+    def _initialize(self) -> None:
+        buf = np.concatenate([p for _, p in self._buffer], axis=0)
+        k = self.n_clusters
+        if len(buf) < k:
+            raise ValueError(
+                f"need at least n_clusters={k} buffered points to "
+                f"initialize, got {len(buf)}")
+        pts = jnp.asarray(buf)
+        key = jax.random.PRNGKey(self.seed)
+        seeder = kmeans_plusplus if self.init == "k-means++" else random_init
+        init_c = seeder(key, pts, k)
+
+        g = self._resolved_groups()
+        groups = group_centroids(init_c, g)
+        self._groups_np = np.asarray(jax.device_get(groups))
+        self._groups = groups
+        self._g = g
+        self._members, self._gsize = _engine.build_group_tables(
+            self._groups_np, g)
+        self._centroids = init_c
+        self._counts = jnp.zeros((k,), jnp.float32)
+        self._ledger = DriftLedger(k, g)
+        self._since_hit = np.zeros((k,), np.int64)
+        self._shards_seen: set = set()
+        self._far: list = []              # [(ub, point)] reseed reservoir
+
+        replay, self._buffer, self._buffered = self._buffer, [], 0
+        for sid, batch in replay:
+            self._step(batch, sid)
+
+    # -- the per-batch step ------------------------------------------------
+
+    def partial_fit(self, points, shard_id=None) -> "StreamingKMeans":
+        """One mini-batch update. ``shard_id`` (hashable) keys the bound
+        cache: pass it whenever the same points will be presented again
+        (epochs over a :class:`~repro.data.PointStream` do this
+        automatically) so carried bounds can skip the distance work."""
+        pts = np.asarray(points, np.float32)
+        if pts.ndim != 2 or pts.shape[0] == 0:
+            raise ValueError(f"expected a non-empty (B, D) batch, got "
+                             f"shape {pts.shape}")
+        if not self.initialized:
+            self._buffer.append((shard_id, pts))
+            self._buffered += len(pts)
+            self.stats_.init_batches += 1
+            size = self.init_size or 2 * self.n_clusters
+            if self._buffered >= max(size, self.n_clusters):
+                self._initialize()
+            return self
+        self._step(pts, shard_id)
+        return self
+
+    def _step(self, pts_np: np.ndarray, sid) -> None:
+        b = pts_np.shape[0]
+        g = self._g
+        pts = jnp.asarray(pts_np)
+        st = self.stats_
+
+        entry = self._cache.get(sid) if sid is not None else None
+        if entry is not None:
+            slack = float(np.max(self._ledger.group - entry.gdrift_snap))
+            if slack > self.drift_reset_factor * max(entry.ub_scale, 1e-12):
+                # bounds still VALID but vacuous — recompute from scratch
+                self._cache.drop(sid)
+                st.drift_resets += 1
+                entry = None
+
+        tightened = 0.0
+        if entry is not None:
+            st.cache_hits += 1
+            ub_i, lb_i = inflate_bounds(entry, self._ledger.centroid,
+                                        self._ledger.group)
+            assign = jnp.asarray(entry.assignments)
+            lb_d = jnp.asarray(lb_i)
+            ub_t, need, n_cand, n_tight = _engine.stream_bounds(
+                pts, self._centroids, assign, jnp.asarray(ub_i), lb_d)
+            n_cand = int(n_cand)
+            tightened = float(n_tight)
+            gmax_guess = max(int(entry.gmax), 1)
+        else:
+            st.cache_misses += 1
+            assign = jnp.zeros((b,), jnp.int32)
+            ub_t = jnp.full((b,), jnp.inf, jnp.float32)
+            lb_d = jnp.zeros((b, g), jnp.float32)
+            need = jnp.ones((b,), bool)
+            n_cand = b
+            gmax_guess = g
+
+        # pow2 capacity lattice (cap_n >= candidate count is a hard
+        # correctness requirement of the compact pass; cap_g is a guess
+        # the pass spills past safely)
+        cap_n = min(_bucket_cap(max(n_cand, 1), min(self.min_bucket, b), b),
+                    b)
+        cap_g = _bucket_cap(gmax_guess, 1, g)
+        out = _engine.stream_update(
+            pts, self._centroids, self._counts, jnp.float32(self.decay),
+            self._groups, self._members, self._gsize, assign, ub_t, lb_d,
+            need, k=self.n_clusters, n_groups=g, cap_n=cap_n, cap_g=cap_g,
+            chunk=self.chunk)
+        self._centroids, self._counts = out.centroids, out.counts
+
+        (nas_np, ub_np, lb_np, pairs, gmax, drift_np, gdrift_np,
+         bcounts_np, bcost) = jax.device_get(
+            (out.assignments, out.ub, out.lb, out.pairs, out.gmax,
+             out.drift, out.gdrift, out.batch_counts, out.batch_cost))
+        self._ledger.add(drift_np.astype(np.float64),
+                         gdrift_np.astype(np.float64))
+
+        st.batches += 1
+        st.points_seen += b
+        st.distance_evals += float(pairs) + tightened
+        per_pt = float(bcost) / b
+        self.ewa_inertia_ = per_pt if self.ewa_inertia_ is None else \
+            (1 - self._ewa_alpha) * self.ewa_inertia_ \
+            + self._ewa_alpha * per_pt
+        self._labels_last = nas_np
+
+        if sid is not None:
+            self._cache.put(sid, ShardBounds(
+                assignments=nas_np, ub=ub_np, lb=lb_np,
+                ub_off=self._ledger.centroid[nas_np],
+                gdrift_snap=self._ledger.group.copy(),
+                gmax=max(int(gmax), 1),
+                ub_scale=float(np.mean(ub_np))))
+
+        if sid is not None:
+            self._shards_seen.add(sid)
+        self._since_hit = np.where(bcounts_np > 0, 0, self._since_hit + 1)
+        self._push_far(pts_np, ub_np)
+        self._maybe_reseed()
+
+    # -- dead-centroid re-seeding ------------------------------------------
+
+    def _push_far(self, pts_np: np.ndarray, ub_np: np.ndarray,
+                  keep: int = 2, cap: int = 64) -> None:
+        """Reservoir of far points (largest distance-to-assigned): the
+        reseed candidates. O(B) per batch, no extra distance work."""
+        order = np.argsort(ub_np)[-keep:]
+        for i in order:
+            if np.isfinite(ub_np[i]):
+                self._far.append((float(ub_np[i]), pts_np[i].copy()))
+        self._far.sort(key=lambda t: -t[0])
+        del self._far[cap:]
+
+    def _maybe_reseed(self, per_batch: int = 2) -> None:
+        # patience in EPOCHS: a centroid is dead only after going
+        # unfed for reseed_patience full passes over the shards seen
+        # so far (a raw batch count would kill live centroids whose
+        # shard arrives late in a long epoch)
+        patience = self.reseed_patience * max(len(self._shards_seen), 1)
+        dead = np.nonzero(self._since_hit >= patience)[0]
+        for c in dead[:per_batch]:
+            if not self._far:
+                break
+            _, p = self._far.pop(0)
+            old = np.asarray(jax.device_get(self._centroids[c]))
+            self._centroids = self._centroids.at[c].set(jnp.asarray(p))
+            self._counts = self._counts.at[c].set(1.0)
+            # a reseed is just a big drift: cached bounds stay valid
+            self._ledger.add_reseed(int(c), float(np.linalg.norm(p - old)),
+                                    int(self._groups_np[c]))
+            self._since_hit[c] = 0
+            self.stats_.reseeds += 1
+
+    # -- stream driving ----------------------------------------------------
+
+    def fit_stream(self, source, epochs: int = 1,
+                   max_batches: int | None = None) -> "StreamingKMeans":
+        """Drive :meth:`partial_fit` over a stream source.
+
+        ``source`` may be a :class:`repro.data.PointStream` (shard ids
+        carried automatically; ``epochs`` replays it), a sequence of
+        arrays or ``(shard_id, array)`` pairs, or any iterable of
+        those / of ``{'points': ..., 'shard_id': ...}`` dicts (the
+        ``PrefetchingLoader`` protocol). Generators are consumed once
+        regardless of ``epochs``. Short streams that never reach
+        ``init_size`` are flushed into an init at the end."""
+        seen = 0
+        for sid, pts in self._iter_source(source, epochs):
+            self.partial_fit(pts, shard_id=sid)
+            seen += 1
+            if max_batches is not None and seen >= max_batches:
+                break
+        if not self.initialized and self._buffer:
+            self._initialize()
+        return self
+
+    @staticmethod
+    def _coerce(item):
+        if isinstance(item, dict):
+            sid = item.get("shard_id")
+            return (None if sid is None else int(sid)), \
+                np.asarray(item["points"])
+        if isinstance(item, tuple) and len(item) == 2:
+            sid, pts = item
+            if isinstance(pts, dict):       # PrefetchingLoader: (step, batch)
+                return StreamingKMeans._coerce(pts)
+            return sid, np.asarray(pts)
+        return None, np.asarray(item)
+
+    def _iter_source(self, source, epochs):
+        if hasattr(source, "batches"):      # PointStream
+            for item in source.batches(epochs):
+                yield item
+            return
+        import collections.abc
+        reiterable = isinstance(source, collections.abc.Sequence)
+        for _ in range(max(int(epochs), 1)):
+            for item in source:
+                yield self._coerce(item)
+            if not reiterable:
+                return
+
+    # -- accessors ---------------------------------------------------------
+
+    @property
+    def cluster_centers_(self) -> np.ndarray:
+        self._require_fitted()
+        return np.asarray(jax.device_get(self._centroids))
+
+    @property
+    def counts_(self) -> np.ndarray:
+        """Decayed effective per-centroid counts (the EMA weights)."""
+        self._require_fitted()
+        return np.asarray(jax.device_get(self._counts))
+
+    @property
+    def labels_(self) -> np.ndarray:
+        """Assignments of the most recent batch."""
+        self._require_fitted()
+        return self._labels_last
+
+    def predict(self, points) -> np.ndarray:
+        self._require_fitted()
+        pts = jnp.asarray(np.asarray(points, np.float32))
+        nas, _, _ = _assign_fresh(
+            pts, self._centroids, self._groups, self._members, self._gsize,
+            n_groups=self._g, cap_n=pts.shape[0])
+        return np.asarray(jax.device_get(nas))
+
+    def inertia_of(self, points) -> float:
+        """Exact sum of squared distances of ``points`` to their nearest
+        current centroid (through the engine pass — no (N, K) matrix)."""
+        self._require_fitted()
+        pts = jnp.asarray(np.asarray(points, np.float32))
+        _, nub, _ = _assign_fresh(
+            pts, self._centroids, self._groups, self._members, self._gsize,
+            n_groups=self._g, cap_n=pts.shape[0])
+        return float(jnp.sum(nub * nub))

@@ -126,6 +126,24 @@ def test_engine_auto_backend_resolves():
         engine.fit(pts, init, backend="nope")
 
 
+def test_engine_auto_routes_tiny_to_lloyd():
+    """BENCH_kmeans.json: at uci-small scale the dense Lloyd GEMM beats
+    the filtered engine ~3.6x, so 'auto' must route below the n*k
+    threshold — and land on the identical fixed point."""
+    pts, init = _dataset(512, 8, 16)
+    assert 512 * 16 <= engine.AUTO_LLOYD_MAX_WORK
+    r, stats = engine.fit(pts, init, backend="auto", max_iters=30,
+                          tol=1e-5, return_stats=True)
+    assert stats.backend == "lloyd"
+    _assert_parity(r, lloyd(pts, init, max_iters=30, tol=1e-5))
+
+    big_pts, big_init = _dataset(4500, 8, 32)
+    assert 4500 * 32 > engine.AUTO_LLOYD_MAX_WORK
+    _, big_stats = engine.fit(big_pts, big_init, backend="auto",
+                              max_iters=10, return_stats=True)
+    assert big_stats.backend in ("compact", "pallas")
+
+
 def test_compact_wrapper_delegates_to_engine_math():
     pts, init = _dataset(4000, 12, 24, seed=7)
     r_l = lloyd(pts, init, max_iters=40, tol=1e-5)

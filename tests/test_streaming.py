@@ -1,0 +1,220 @@
+"""Streaming / mini-batch subsystem: parity, bound validity, lifecycle.
+
+Three contracts:
+
+* CONVERGENCE — ``partial_fit`` over all shards of a dataset lands
+  within a bounded inertia gap of the batch engine fit (the subsystem's
+  acceptance metric), while doing measurably less distance work than a
+  dense mini-batch pass thanks to the carried bounds.
+* SOUNDNESS — the drift-inflated bounds (``inflate_bounds``) remain
+  true triangle-inequality bounds under arbitrary centroid drift
+  sequences (property test): a violated bound would silently skip a
+  nearer centroid, so this is the invariant everything rests on.
+* LIFECYCLE — NotFittedError before enough data, deterministic shard
+  streams, decay semantics, reseeding, KMeans.partial_fit delegation.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import KMeans, NotFittedError, engine, kmeans_plusplus
+from repro.data import PointStream, make_points
+from repro.streaming import ShardBounds, StreamingKMeans, inflate_bounds
+
+
+def test_stream_parity_with_batch_engine():
+    pts, _, _ = make_points(4096, 16, 16, seed=0)
+    init = kmeans_plusplus(jax.random.PRNGKey(1), jnp.asarray(pts), 16)
+    r_b = engine.fit(jnp.asarray(pts), init, max_iters=50, tol=1e-4,
+                     backend="compact")
+
+    stream = PointStream(shard_size=512, data=pts)
+    skm = StreamingKMeans(16, seed=1).fit_stream(stream, epochs=6)
+    ratio = skm.inertia_of(pts) / float(r_b.inertia)
+    assert ratio < 1.05
+
+    # bound carry really engaged: epochs 2+ hit the per-shard cache and
+    # the filtered pass did well under dense mini-batch work
+    assert skm.stats_.cache_hits >= stream.n_shards
+    dense_equiv = skm.stats_.batches * 512 * 16
+    assert skm.stats_.distance_evals < 0.8 * dense_equiv
+
+
+def test_point_stream_determinism_and_coverage():
+    ps = PointStream(shard_size=128, n_shards=4, n_dims=8, k=4, seed=3)
+    np.testing.assert_array_equal(ps.shard(1), ps.shard(1))
+    np.testing.assert_array_equal(ps.shard(5), ps.shard(1))   # wraps
+    assert ps.shard(0).shape == (128, 8) and ps.shard(0).dtype == np.float32
+    assert not np.array_equal(ps.shard(0), ps.shard(1))
+
+    data = np.arange(100 * 3, dtype=np.float32).reshape(100, 3)
+    ds = PointStream(shard_size=32, data=data)
+    assert ds.n_shards == 4
+    got = np.concatenate([ds.shard(i) for i in range(ds.n_shards)])
+    np.testing.assert_array_equal(got, data)   # short last shard kept
+    batches = list(ds.batches(epochs=2))
+    assert len(batches) == 8
+    assert [sid for sid, _ in batches[:4]] == [0, 1, 2, 3]
+
+
+def test_point_stream_prefetch_protocol():
+    ps = PointStream(shard_size=64, n_shards=3, n_dims=4, k=2, seed=0)
+    b = ps.global_batch(4)
+    assert b["shard_id"] == 1
+    np.testing.assert_array_equal(b["points"], ps.shard(1))
+    # fit_stream consumes the (step, dict) PrefetchingLoader item shape
+    skm = StreamingKMeans(2, init_size=64)
+    skm.fit_stream([(s, ps.global_batch(s)) for s in range(3)])
+    assert skm.cluster_centers_.shape == (2, 4)
+    assert skm.stats_.cache_misses >= 1
+
+
+def test_not_fitted_before_first_partial_fit():
+    skm = StreamingKMeans(8)
+    for attr in ("cluster_centers_", "counts_", "labels_"):
+        with pytest.raises(NotFittedError):
+            getattr(skm, attr)
+    with pytest.raises(NotFittedError):
+        skm.predict(np.zeros((4, 3), np.float32))
+    with pytest.raises(NotFittedError):
+        skm.inertia_of(np.zeros((4, 3), np.float32))
+
+
+def test_cold_start_buffers_then_initializes():
+    rng = np.random.default_rng(0)
+    skm = StreamingKMeans(4, init_size=100)
+    skm.partial_fit(rng.standard_normal((40, 3)).astype(np.float32))
+    assert not skm.initialized and skm.stats_.init_batches == 1
+    with pytest.raises(NotFittedError):
+        skm.cluster_centers_
+    skm.partial_fit(rng.standard_normal((70, 3)).astype(np.float32))
+    assert skm.initialized
+    # buffered batches were replayed through the real step
+    assert skm.stats_.batches == 2 and skm.stats_.points_seen == 110
+    assert skm.cluster_centers_.shape == (4, 3)
+    assert skm.predict(np.zeros((5, 3), np.float32)).shape == (5,)
+
+
+def test_kmeans_api_partial_fit_delegates():
+    pts, _, _ = make_points(1024, 8, 8, seed=2)
+    km = KMeans(n_clusters=8, seed=1)
+    with pytest.raises(NotFittedError):
+        km.labels_
+    for sid in range(4):
+        km.partial_fit(pts[sid * 256:(sid + 1) * 256], shard_id=sid)
+    assert km.cluster_centers_.shape == (8, 8)
+    assert km.n_iter_ == 4                     # batches, for the stream path
+    assert km.predict(pts[:16]).shape == (16,)
+    # a fresh batch fit supersedes the stream state
+    km.fit(pts)
+    assert km.labels_.shape == (1024,)
+
+
+def test_decay_bounds_effective_counts():
+    stream = PointStream(shard_size=256, n_shards=6, n_dims=4, k=4, seed=1)
+    skm = StreamingKMeans(4, decay=0.9, seed=0).fit_stream(stream, epochs=3)
+    # decayed horizon: total effective count <= B/(1-decay) + one batch
+    assert skm.counts_.sum() <= 256 / (1 - 0.9) + 256
+    assert np.isfinite(skm.cluster_centers_).all()
+    with pytest.raises(ValueError):
+        StreamingKMeans(4, decay=0.0)
+
+
+def test_reseed_records_drift_and_keeps_bounds_valid():
+    stream = PointStream(shard_size=256, n_shards=4, n_dims=4, k=4, seed=5)
+    skm = StreamingKMeans(4, seed=0).fit_stream(stream, epochs=2)
+    before = skm.stats_.reseeds
+    ledger_before = skm._ledger.centroid.copy()
+    assert skm._far                       # reservoir populated by batches
+    # patience is epoch-scaled: reseed_patience full passes unfed
+    skm._since_hit[0] = skm.reseed_patience * len(skm._shards_seen)
+    skm._maybe_reseed()
+    assert skm.stats_.reseeds == before + 1
+    assert skm._ledger.centroid[0] > ledger_before[0]
+    # stream continues fine after the reseed (cached bounds still valid:
+    # the reseed entered the ledger as drift)
+    skm.fit_stream(stream, epochs=1)
+    assert np.isfinite(skm.inertia_of(stream.shard(0)))
+
+
+def test_stream_update_empty_group_drift_is_finite():
+    """An empty Yinyang group's segment_max drift is -inf; left
+    unclamped it would poison the cumulative drift ledger (inf - inf =
+    NaN on the next bound inflation). Regression for the clamp in
+    engine.stream_update."""
+    rng = np.random.default_rng(0)
+    k, g, b, d = 4, 2, 32, 3
+    pts = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
+    groups_np = np.zeros((k,), np.int64)            # group 1 is EMPTY
+    members, gsize = engine.build_group_tables(groups_np, g)
+    out = engine.stream_update(
+        pts, c, jnp.zeros((k,), jnp.float32), jnp.float32(1.0),
+        jnp.asarray(groups_np.astype(np.int32)), members, gsize,
+        jnp.zeros((b,), jnp.int32), jnp.full((b,), jnp.inf, jnp.float32),
+        jnp.zeros((b, g), jnp.float32), jnp.ones((b,), bool),
+        k=k, n_groups=g, cap_n=b, cap_g=g)
+    assert np.all(np.isfinite(np.asarray(out.gdrift)))
+    assert np.all(np.asarray(out.gdrift) >= 0)
+
+
+# -- property test: bounds survive arbitrary drift -------------------------
+
+def _check_bounds_survive_drift(seed, steps, scale):
+    """inflate_bounds must keep ub an upper bound on d(x, c_assign) and
+    lb[., g] a lower bound on the group-g min (excluding the assigned
+    centroid) after ANY sequence of centroid moves, given only the
+    cumulative drift ledgers."""
+    rng = np.random.default_rng(seed)
+    n, d, k, g = 48, 4, 8, 3
+    pts = rng.standard_normal((n, d)).astype(np.float32)
+    c = rng.standard_normal((k, d)).astype(np.float32)
+    groups = np.arange(k) % g
+
+    d_mat = np.linalg.norm(pts[:, None] - c[None], axis=-1)
+    assign = d_mat.argmin(1).astype(np.int32)
+    ub = d_mat.min(1).astype(np.float32)
+    d_ex = d_mat.copy()
+    d_ex[np.arange(n), assign] = np.inf
+    lb = np.stack([d_ex[:, groups == j].min(1) for j in range(g)],
+                  axis=1).astype(np.float32)
+
+    cum_c = np.zeros(k)
+    cum_g = np.zeros(g)
+    entry = ShardBounds(assign, ub, lb, cum_c[assign].astype(np.float32),
+                        cum_g.copy(), g, float(ub.mean()))
+    for _ in range(steps):
+        move = rng.standard_normal((k, d)) * scale * rng.uniform(size=(k, 1))
+        c = c + move
+        dr = np.linalg.norm(move, axis=-1)
+        cum_c += dr
+        for j in range(g):
+            cum_g[j] += dr[groups == j].max()
+
+    ub2, lb2 = inflate_bounds(entry, cum_c, cum_g)
+    d_now = np.linalg.norm(pts[:, None] - c[None], axis=-1)
+    assert np.all(ub2 >= d_now[np.arange(n), assign] - 1e-3)
+    d_now_ex = d_now.copy()
+    d_now_ex[np.arange(n), assign] = np.inf
+    for j in range(g):
+        assert np.all(lb2[:, j] <= d_now_ex[:, groups == j].min(1) + 1e-3)
+
+
+@pytest.mark.parametrize("seed,steps,scale", [
+    (0, 1, 0.05), (1, 3, 0.5), (2, 6, 2.0), (7, 4, 1.0), (11, 2, 0.2),
+])
+def test_bounds_survive_drift(seed, steps, scale):
+    _check_bounds_survive_drift(seed, steps, scale)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(0, 2 ** 16), st.integers(1, 6),
+           st.floats(0.01, 2.0))
+    def test_bounds_survive_drift_property(seed, steps, scale):
+        _check_bounds_survive_drift(seed, steps, scale)
