@@ -1,0 +1,66 @@
+"""Refresh the engine's tuning cache for the benchmark suite.
+
+  PYTHONPATH=src python -m benchmarks.autotune [--scale 0.1] [--limit N]
+
+For each problem of the paper suite (at the given scale), runs the
+measured configuration search (:func:`repro.tune.autotune`) and
+persists the winner under its (platform, N, K, D) signature — after
+which every ``engine.fit(tune="auto")`` on a same-signature problem
+(including ``benchmarks.kmeans_speedup``) picks the tuned config up
+automatically. Invoked by ``benchmarks/run.py --tune``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import tune as _tune
+from repro.configs.kpynq import paper_suite
+from repro.core import kmeans_plusplus
+from repro.data import make_points
+
+
+def tune_suite(scale=1.0, limit=None, repeats=3, max_measurements=32,
+               verbose=False):
+    """Autotune every suite problem; returns [(name, signature,
+    EngineConfig, cache_entry)] in suite order."""
+    rows = []
+    cache = _tune.default_cache()
+    for prob in paper_suite[:limit]:
+        n = max(int(prob.n_points * scale), 512)
+        pts_np, _, _ = make_points(n, prob.n_dims, prob.k, seed=0)
+        pts = jnp.asarray(pts_np)
+        init = kmeans_plusplus(jax.random.PRNGKey(1), pts, prob.k)
+        cfg = _tune.autotune(
+            pts, init, n_groups=prob.n_groups, max_iters=prob.max_iters,
+            tol=prob.tol, cache=cache, repeats=repeats,
+            max_measurements=max_measurements, verbose=verbose)
+        sig = _tune.signature(n, prob.k, prob.n_dims)
+        rows.append((prob.name, sig, cfg, cache.entry(sig)))
+    return rows
+
+
+def main(scale=1.0, limit=None, verbose=True):
+    rows = tune_suite(scale=scale, limit=limit, verbose=verbose)
+    print("name,us_per_call,derived")
+    for name, sig, cfg, entry in rows:
+        ms = (entry or {}).get("ms", float("nan"))
+        lms = (entry or {}).get("lloyd_ms", float("nan"))
+        print(f"autotune/{name},{ms * 1e3:.1f},backend={cfg.backend} "
+              f"min_cap={cfg.min_cap} chunk={cfg.chunk} "
+              f"ggf={cfg.group_gather_factor} down=({cfg.down_n},"
+              f"{cfg.down_g}) tile_n={cfg.tile_n} "
+              f"lloyd_ms={lms:.2f} sig={sig}")
+    print(f"autotune/CACHE,,path={_tune.default_cache().path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--limit", type=int, default=None)
+    ap.add_argument("--quiet", action="store_true")
+    a = ap.parse_args()
+    main(scale=a.scale, limit=a.limit, verbose=not a.quiet)

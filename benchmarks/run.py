@@ -1,18 +1,34 @@
 """Benchmark harness: one section per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
+  PYTHONPATH=src python -m benchmarks.run --quick --tune   # retune first
   PYTHONPATH=src python -m benchmarks.run --check        # CI perf gate
 
 Prints ``name,us_per_call,derived`` CSV per line, and writes the
 K-means perf record to ``BENCH_kmeans.json`` (per-dataset ``lloyd_ms``,
-``engine_ms``, ``speedup``, ``work_reduction`` + suite means, plus the
-``streaming`` subsystem record) so the perf trajectory is tracked
-across PRs.
+``engine_ms``, ``speedup``, ``work_reduction``, winning ``tuned``
+config + suite means, plus the ``streaming`` subsystem record) so the
+perf trajectory is tracked across PRs.
 
-``--check`` is the regression gate: it re-measures the quick suite and
-compares ``mean_speedup`` against the committed record (within
-``--check-tolerance``, timing noise being what it is) and requires the
-streaming fit's inertia gap to stay within 5% of the batch engine.
+``--tune`` refreshes the engine's per-(platform, N, K, D) tuning cache
+(``benchmarks/autotune.py`` -> :mod:`repro.tune`) for the suite's
+problem signatures BEFORE measuring, so the ``engine`` rows run the
+tuned configurations.
+
+``--check`` is the regression gate:
+
+* re-measures the quick suite and compares ``mean_speedup`` against
+  the committed record (within ``--check-tolerance``, timing noise
+  being what it is);
+* requires the COMMITTED record itself to show the engine at no worse
+  than 5% behind Lloyd (``engine_ms <= lloyd_ms * 1.05 + 0.25``; the
+  absolute term is the wrapper's fixed dispatch cost, visible only on
+  sub-ms rows) on every quick-suite dataset — the deterministic
+  wall-clock contract of ISSUE 3 (the engine's work-efficiency must
+  not cost wall-clock);
+* requires the streaming fit's inertia gap to stay within 5% of the
+  batch engine.
+
 Exit code 1 on regression — CI-invocable.
 """
 import argparse
@@ -32,9 +48,28 @@ def check(args) -> None:
               f"benchmark first", file=sys.stderr)
         sys.exit(2)
 
+    # committed-record wall-clock gate: the engine row of every dataset
+    # must be within 5% of its Lloyd baseline (deterministic — no
+    # re-measurement; the record is only committed when it holds). The
+    # 0.25ms absolute term covers the engine wrapper's fixed dispatch
+    # overhead, which is structural (not a regression) on sub-ms
+    # Lloyd-routed rows and negligible everywhere else.
+    wall_ok = True
+    for row in committed.get("datasets", []):
+        ratio = row["engine_ms"] / max(row["lloyd_ms"], 1e-9)
+        ok = row["engine_ms"] <= row["lloyd_ms"] * 1.05 + 0.25
+        wall_ok &= ok
+        print(f"check: committed {row['dataset']}: engine/lloyd="
+              f"{ratio:.3f} (limit 1.05 + 0.25ms) -> "
+              f"{'OK' if ok else 'REGRESSION'}")
+
+    scale = committed.get("scale", 0.1)
+    if args.tune:
+        from . import autotune
+        autotune.tune_suite(scale=scale)
+
     # re-measure at the committed record's scale: speedups at different
     # problem sizes are incommensurable (tiny fits auto-route to Lloyd)
-    scale = committed.get("scale", 0.1)
     rows = kmeans_speedup.run(scale=scale)
     fresh = kmeans_speedup.summarize(rows)["mean_speedup"]
     ref = committed["mean_speedup"]
@@ -48,7 +83,7 @@ def check(args) -> None:
     gap_ok = srow["inertia_gap"] <= 0.05
     print(f"check: streaming inertia_gap={srow['inertia_gap'] * 100:+.2f}% "
           f"(limit +5%) -> {'OK' if gap_ok else 'REGRESSION'}")
-    sys.exit(0 if speed_ok and gap_ok else 1)
+    sys.exit(0 if wall_ok and speed_ok and gap_ok else 1)
 
 
 def main() -> None:
@@ -67,6 +102,10 @@ def main() -> None:
                     help="--check fails when fresh mean_speedup drops "
                          "below committed * this factor (default 0.6 — "
                          "shared-CI timing noise is large)")
+    ap.add_argument("--tune", action="store_true",
+                    help="refresh the engine tuning cache "
+                         "(benchmarks/autotune.py) for the suite's "
+                         "problem signatures before measuring")
     args = ap.parse_args()
     if args.check:
         check(args)
@@ -75,6 +114,12 @@ def main() -> None:
 
     from . import filter_efficiency, group_sweep, kernel_bench
     from . import kmeans_speedup, roofline_report, streaming_bench
+
+    if args.tune:
+        from . import autotune
+        print("# === autotune: engine configuration search ===",
+              flush=True)
+        autotune.main(scale=scale, verbose=False)
 
     print("# === paper Table: KPynq vs standard K-means ===", flush=True)
     kmeans_speedup.main(scale=scale, json_path=args.json or None)

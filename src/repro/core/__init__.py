@@ -3,7 +3,7 @@ from .api import KMeans, NotFittedError
 from .distances import pairwise_dists, pairwise_sq_dists, rowwise_dists
 from .compact import yinyang_compact
 from .distributed import distributed_yinyang
-from .engine import EngineStats, fit as engine_fit
+from .engine import EngineConfig, EngineStats, fit as engine_fit
 from .init import kmeans_plusplus, random_init
 from .kmeans import EvalCount, KMeansResult, group_centroids, lloyd, yinyang
 
@@ -11,6 +11,6 @@ __all__ = [
     "KMeans", "KMeansResult", "NotFittedError", "lloyd", "yinyang",
     "group_centroids", "kmeans_plusplus", "random_init",
     "distributed_yinyang", "yinyang_compact", "engine_fit", "EngineStats",
-    "EvalCount",
+    "EngineConfig", "EvalCount",
     "pairwise_dists", "pairwise_sq_dists", "rowwise_dists",
 ]

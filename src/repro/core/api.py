@@ -32,7 +32,7 @@ class KMeans:
     n_groups : group count for 'yinyang' (default K//10, the paper-family
         heuristic).
     init : 'k-means++' | 'random'
-    engine : None | 'auto' | 'oracle' | 'compact' | 'pallas'
+    engine : None | 'auto' | 'oracle' | 'compact' | 'pallas' | 'lloyd'
         None runs the reference ``lax.while_loop`` implementation in
         :mod:`repro.core.kmeans`. Any other value routes the filtered
         algorithms through the device-resident execution engine
@@ -44,6 +44,16 @@ class KMeans:
         there; same fixed point). Results are identical either way;
         only the wall-clock changes. Ignored for ``algorithm='lloyd'``
         (there is nothing to filter).
+    tune : 'auto' | 'off' | 'force'
+        Per-(platform, N, K, D) autotuning of the engine configuration
+        (:mod:`repro.tune`; cache at ``~/.cache/repro_kmeans_tune.json``
+        unless ``REPRO_KMEANS_TUNE_CACHE`` overrides). 'auto' (default)
+        uses a cached winner when one exists; 'force' runs the measured
+        search on a cache miss (one-time cost, persisted; the STREAMING
+        path never measures — there 'force' degrades to 'auto'); 'off'
+        uses the engine's built-in defaults. Tuning changes wall-clock
+        only — results are bit-identical. Only consulted when
+        ``engine`` is not None.
     decay : per-batch count decay for the STREAMING path (see
         :meth:`partial_fit`); unused by :meth:`fit`.
     """
@@ -51,14 +61,18 @@ class KMeans:
     def __init__(self, n_clusters: int, algorithm: str = "yinyang",
                  n_groups: int | None = None, init: str = "k-means++",
                  max_iters: int = 100, tol: float = 1e-4, seed: int = 0,
-                 engine: str | None = None, decay: float = 1.0):
+                 engine: str | None = None, decay: float = 1.0,
+                 tune: str = "auto"):
         if algorithm not in ("lloyd", "hamerly", "yinyang"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
-        if engine is not None and engine != "auto" \
+        if engine is not None and engine not in ("auto", "lloyd") \
                 and engine not in _engine.BACKENDS:
             raise ValueError(
-                f"unknown engine {engine!r}; expected None, 'auto' or one "
-                f"of {_engine.BACKENDS}")
+                f"unknown engine {engine!r}; expected None, 'auto', "
+                f"'lloyd' or one of {_engine.BACKENDS}")
+        if tune not in ("auto", "off", "force"):
+            raise ValueError(f"unknown tune mode {tune!r}; expected "
+                             f"'auto', 'off' or 'force'")
         self.n_clusters = n_clusters
         self.algorithm = algorithm
         self.n_groups = n_groups
@@ -68,6 +82,7 @@ class KMeans:
         self.seed = seed
         self.engine = engine
         self.decay = decay
+        self.tune = tune
         self.result_: _km.KMeansResult | None = None
         self._stream = None
 
@@ -90,7 +105,7 @@ class KMeans:
             else:
                 res = _engine.fit(points, init_c, n_groups=n_groups,
                                   max_iters=self.max_iters, tol=self.tol,
-                                  backend=self.engine)
+                                  backend=self.engine, tune=self.tune)
         self.result_ = jax.tree.map(jax.device_get, res)
         self._stream = None       # a batch fit supersedes any stream state
         return self
@@ -127,7 +142,7 @@ class KMeans:
                 else self.n_groups
             self._stream = _streaming.StreamingKMeans(
                 self.n_clusters, n_groups=n_groups, init=self.init,
-                decay=self.decay, seed=self.seed)
+                decay=self.decay, seed=self.seed, tune=self.tune)
         s = self._stream.partial_fit(points, shard_id=shard_id)
         if s.initialized:
             self.result_ = _km.KMeansResult(

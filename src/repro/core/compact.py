@@ -21,21 +21,21 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .distances import rowwise_dists
+from .distances import row_norms_sq, rowwise_dists
 from .engine import compact_candidate_pass, move_and_bounds
 from .kmeans import KMeansResult, _init_filter_state, group_centroids
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_groups"))
-def _move_and_bounds(points, centroids, assignments, ub, lb, groups,
+def _move_and_bounds(points, x2, centroids, assignments, ub, lb, groups,
                      *, k, n_groups):
     return move_and_bounds(points, centroids, assignments, ub, lb, groups,
-                           k=k, n_groups=n_groups)
+                           k=k, n_groups=n_groups, x2=x2)
 
 
 @functools.partial(jax.jit, static_argnames=("cap", "n_groups"))
-def _candidate_pass(points, new_c, assignments, ub_t, lb, groups, need,
-                    *, cap, n_groups):
+def _candidate_pass(points, x2, new_c, c2, assignments, ub_t, lb, groups,
+                    need, *, cap, n_groups):
     # cap_g = n_groups disables the centroid-level bucket: this driver
     # computes every candidate against all K centroids, as the seed did.
     k = new_c.shape[0]
@@ -44,7 +44,7 @@ def _candidate_pass(points, new_c, assignments, ub_t, lb, groups, need,
     a, u, l, _, _ = compact_candidate_pass(
         points, new_c, assignments, ub_t, lb, groups, dummy_members,
         dummy_gsize, need, cap_n=cap, cap_g=n_groups, n_groups=n_groups,
-        use_groups=False)
+        use_groups=False, x2=x2, c2=c2)
     return a, u, l
 
 
@@ -57,16 +57,17 @@ def yinyang_compact(points, init_centroids, n_groups=None,
         n_groups = max(k // 10, 1)
     n_groups = int(min(n_groups, k))
     groups = group_centroids(init_centroids.astype(jnp.float32), n_groups)
+    x2 = row_norms_sq(points)                 # once per fit
     state = _init_filter_state(points, init_centroids.astype(jnp.float32),
-                               groups, n_groups)
+                               groups, n_groups, x2=x2)
     centroids, assignments = state.centroids, state.assignments
     ub, lb = state.ub, state.lb
     evals = float(state.distance_evals.total())
 
     it = 0
     for it in range(1, max_iters + 1):
-        centroids, ub, lb, need, shift, tighten = _move_and_bounds(
-            points, centroids, assignments, ub, lb, groups,
+        centroids, c2, ub, lb, need, shift, tighten = _move_and_bounds(
+            points, x2, centroids, assignments, ub, lb, groups,
             k=k, n_groups=n_groups)
         evals += float(tighten)
         n_cand = int(jnp.sum(need))           # per-iteration host sync
@@ -74,8 +75,8 @@ def yinyang_compact(points, init_centroids, n_groups=None,
             cap = max(min_cap, 1 << (n_cand - 1).bit_length())
             cap = min(cap, n)
             assignments, ub, lb = _candidate_pass(
-                points, centroids, assignments, ub, lb, groups, need,
-                cap=cap, n_groups=n_groups)
+                points, x2, centroids, c2, assignments, ub, lb, groups,
+                need, cap=cap, n_groups=n_groups)
             evals += float(n_cand * k)
         if float(shift) <= tol:               # per-iteration host sync
             break

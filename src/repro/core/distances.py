@@ -4,28 +4,52 @@ All bound arithmetic is fp32 (the filters must never prune the true
 nearest centroid); the bulk matmul term may run in bf16 on TPU via the
 Pallas kernel in ``repro.kernels`` — this module is the pure-jnp
 reference semantics used by the algorithm layer and the oracles.
+
+Every pairwise primitive accepts optional precomputed squared norms
+(``x2`` for rows, ``c2`` for centroids).  Point norms never change
+during a fit and centroid norms change once per iteration, so the
+callers (engine / reference loops) compute ``||x||^2`` ONCE PER FIT and
+``||c||^2`` once per iteration and thread them through — recomputing
+them inside every distance call was measurable on the hot path
+(ISSUE 3). Passing ``None`` recomputes locally (reference semantics,
+bit-identical: the same ``sum(x*x)`` expression either way).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+def row_norms_sq(x: jnp.ndarray) -> jnp.ndarray:
+    """``||x_i||^2`` per row, (N, D) -> (N,) fp32 — THE norm expression
+    shared by every distance path (callers cache its output)."""
+    x = x.astype(jnp.float32)
+    return jnp.sum(x * x, axis=-1)
+
+
+def pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray,
+                      x2: jnp.ndarray | None = None,
+                      c2: jnp.ndarray | None = None) -> jnp.ndarray:
     """Squared Euclidean distances, (N, D) x (K, D) -> (N, K).
 
     Expanded as ||x||^2 - 2 x.c + ||c||^2 so the dominant term is a
     single (N, D) x (D, K) matmul (MXU-friendly on the target hardware).
+    ``x2`` / ``c2``: optional precomputed squared norms (see module
+    docstring).
     """
     x = x.astype(jnp.float32)
     c = c.astype(jnp.float32)
-    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (N, 1)
-    c2 = jnp.sum(c * c, axis=-1)                          # (K,)
-    d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]
+    if x2 is None:
+        x2 = row_norms_sq(x)
+    if c2 is None:
+        c2 = row_norms_sq(c)
+    d2 = x2[:, None] - 2.0 * (x @ c.T) + c2[None, :]
     return jnp.maximum(d2, 0.0)                           # numerical floor
 
 
-def pairwise_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
-    return jnp.sqrt(pairwise_sq_dists(x, c))
+def pairwise_dists(x: jnp.ndarray, c: jnp.ndarray,
+                   x2: jnp.ndarray | None = None,
+                   c2: jnp.ndarray | None = None) -> jnp.ndarray:
+    return jnp.sqrt(pairwise_sq_dists(x, c, x2, c2))
 
 
 def rowwise_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:

@@ -38,7 +38,7 @@ except ImportError:                      # jax >= 0.7
     _shard_map = jax.shard_map
     _SHARD_MAP_KW = {"check_vma": False}
 
-from .distances import rowwise_dists
+from .distances import row_norms_sq, rowwise_dists
 from .engine import dense_candidate_pass, move_and_bounds
 from .kmeans import (FilterState, KMeansResult, _init_filter_state,
                      group_centroids)
@@ -59,14 +59,15 @@ def _psum_maybe_compressed(x: jnp.ndarray, axes, compress: bool):
 
 def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
                      max_iters: int, tol: float, compress: bool = False,
-                     opt_sq: bool = False, unroll_iters: int = 0):
+                     opt_sq: bool = True, unroll_iters: int = 0):
     """Build the jittable shard_map K-means fit (AOT-lowerable for the
     production-mesh dry-run; executed by distributed_yinyang).
 
-    opt_sq=True (§Perf optimization): run the masked min/argmin pass on
-    SQUARED distances (monotone, so results are identical) and sqrt only
-    the (N,) / (N,G) reduced outputs — removes a full (N, K) sqrt pass
-    and its HBM round-trip per iteration.
+    opt_sq (default True, §Perf optimization): run the masked
+    min/argmin pass on SQUARED distances (monotone, so results are
+    identical) and sqrt only the (N,) / (N,G) reduced outputs —
+    removes a full (N, K) sqrt pass and its HBM round-trip per
+    iteration.
 
     unroll_iters>0: replace the while_loop with exactly that many python
     iterations — analysis artifacts only (XLA cost_analysis does not
@@ -88,21 +89,29 @@ def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
     def fit_sharded(local_points, init_c):
         groups = group_centroids(init_c, n_groups)
 
+        # shard-local ||x||^2, computed ONCE per fit and closed over by
+        # the loop body; ||c||^2 flows move -> candidate pass per
+        # iteration (both passes run in the same body here)
+        x2 = row_norms_sq(local_points)
+
         # replicated init assignment pass (local points only)
-        state0 = _init_filter_state(local_points, init_c, groups, n_groups)
+        state0 = _init_filter_state(local_points, init_c, groups, n_groups,
+                                    x2=x2)
 
         def cond(state):
             return jnp.logical_and(state.iteration < max_iters,
                                    state.shift > tol)
 
         def body(state: FilterState):
-            new_c, ub_t, lb_dec, need, shift, tightened = move_and_bounds(
-                local_points, state.centroids, state.assignments,
-                state.ub, state.lb, groups, k=k, n_groups=n_groups,
-                reduce_sums=reduce_sums)
+            new_c, c2, ub_t, lb_dec, need, shift, tightened = \
+                move_and_bounds(
+                    local_points, state.centroids, state.assignments,
+                    state.ub, state.lb, groups, k=k, n_groups=n_groups,
+                    reduce_sums=reduce_sums, x2=x2)
             new_assign, new_ub, new_lb, pairs = dense_candidate_pass(
                 local_points, new_c, state.assignments, ub_t, lb_dec,
-                groups, need, n_groups=n_groups, opt_sq=opt_sq)
+                groups, need, n_groups=n_groups, opt_sq=opt_sq, x2=x2,
+                c2=c2)
             return FilterState(state.iteration + 1, new_c, new_assign,
                                new_ub, new_lb, shift,
                                state.distance_evals.add(tightened)

@@ -16,6 +16,13 @@ filter levels as skipped work:
   are compacted into a padded per-point group bucket and only those
   groups' centroids are gathered for the distance pass — the
   group-level filter becomes skipped FLOPs, not just bookkeeping;
+* **norm caching**: ``||x||^2`` is computed ONCE PER FIT and carried
+  through the ``lax.while_loop`` (``EngineCarry.x2``); ``||c||^2`` is
+  computed once per iteration by :func:`move_and_bounds` and shared by
+  the own-distance refresh and the next candidate pass
+  (``EngineCarry.c2``). On the compact backend the own-distance
+  refresh itself runs on the COMPACTED survivor buffer instead of all
+  N rows (``refresh_ub=True`` in :func:`compact_candidate_pass`);
 * the Pallas block-skip kernel (``repro.kernels.grouped_assign``) slots
   in as the TPU backend behind the same interface.
 
@@ -31,12 +38,28 @@ Backend selection (``backend=`` on :func:`fit`):
     Group-granular block-skip Pallas kernel (``interpret=True`` runs it
     anywhere). Default on TPU, where per-point gathers are hostile but
     skipping whole (tile_n x group) blocks is free.
+``"lloyd"``
+    The jit-cached reference Lloyd loop — one dense GEMM per
+    iteration, no filter bookkeeping. The right call below the
+    work crossover (see ``EngineConfig.lloyd_max_work``) and a
+    legitimate autotuner outcome for filter-hostile shapes.
 ``"auto"``
-    ``"pallas"`` when ``jax.default_backend() == "tpu"``, else
-    ``"compact"`` — EXCEPT tiny problems (``n * k <=
-    AUTO_LLOYD_MAX_WORK``), which route straight to the reference
-    Lloyd loop: below that size one dense GEMM per iteration beats any
-    filter bookkeeping (measured in ``BENCH_kmeans.json``, uci-small).
+    Consults the tuned configuration (see below) when one exists;
+    otherwise ``"lloyd"`` for tiny problems (``n * k <=
+    lloyd_max_work``), ``"pallas"`` on TPU, ``"compact"`` elsewhere.
+
+Autotuning (``tune=`` on :func:`fit`): every fixed knob of this engine
+— ``tile_n``, ``min_cap``, ``chunk``, the group-gather crossover, the
+downshift hysteresis, the backend itself — is a measured choice, and
+the right value depends on (platform, N, K, D). ``tune="auto"``
+(default) consults the persistent tuning cache
+(:mod:`repro.tune`, ``~/.cache/repro_kmeans_tune.json`` unless
+``REPRO_KMEANS_TUNE_CACHE`` overrides) and uses the cached winner for
+this problem signature; ``tune="force"`` runs the measured search on a
+cache miss and persists the winner; ``tune="off"`` uses the built-in
+defaults. Tuned configurations change SHAPES AND DISPATCH ONLY — the
+fixed point (assignments, inertia) is bit-identical for every
+configuration (``tests/test_tune.py`` asserts this).
 
 Every backend is exact: fixed points are identical to Lloyd's
 (``tests/test_engine.py`` checks assignments/inertia parity across the
@@ -55,19 +78,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .distances import pairwise_dists, pairwise_sq_dists, rowwise_dists
+from .distances import (pairwise_dists, pairwise_sq_dists, row_norms_sq,
+                        rowwise_dists)
 from .kmeans import (EvalCount, KMeansResult, _init_filter_state,
                      centroid_sums, centroids_from_sums, group_centroids,
                      lloyd)
 
 BACKENDS = ("oracle", "compact", "pallas")
 
-# backend="auto" routes problems with n*k at or below this straight to
-# the reference Lloyd loop: BENCH_kmeans.json shows the dense (N, K)
-# GEMM beating the filtered engine by ~3.6x at uci-small scale (n=512,
-# k=32 -> n*k=16384) — at that size one fused matmul per iteration is
-# cheaper than any bound bookkeeping. The fixed point is identical
-# (tests/test_engine.py parity matrix), only distance_evals differ.
+# Default backend="auto" work crossover: problems with n*k at or below
+# this route straight to the reference Lloyd loop — BENCH_kmeans.json
+# shows the dense (N, K) GEMM beating the filtered engine at uci-small
+# scale, where one fused matmul per iteration is cheaper than any bound
+# bookkeeping. The fixed point is identical (tests/test_engine.py
+# parity matrix), only distance_evals differ. The per-signature tuned
+# value lives in EngineConfig.lloyd_max_work.
 AUTO_LLOYD_MAX_WORK = 1 << 17
 
 # jit-cached Lloyd for the tiny-problem route: calling the bare
@@ -79,11 +104,87 @@ _lloyd_jit = functools.partial(jax.jit, static_argnames=(
 
 
 # --------------------------------------------------------------------------
+# engine configuration (the autotuner's search space)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """One point in the engine's configuration space.
+
+    Every field is a measured choice the autotuner (:mod:`repro.tune`)
+    searches per (platform, N, K, D) signature; none of them affects
+    the fixed point — only shapes, dispatch, and wall-clock.
+
+    backend : "auto" | "oracle" | "compact" | "pallas" | "lloyd"
+        Candidate-pass realisation. "auto" defers to the platform /
+        ``lloyd_max_work`` rules in :func:`fit`.
+    tile_n : point-tile height of the Pallas block-skip kernels.
+    min_cap : floor of the power-of-two point-capacity lattice.
+    chunk : largest compacted candidate count for which the per-point
+        group-gather path is considered (above it the dense GEMM on
+        the survivor buffer wins; XLA gathers scale worse than BLAS).
+    group_gather_factor : the group-gather path is taken only when
+        ``cap_g * l_max * group_gather_factor <= k`` — i.e. the group
+        filter must remove at least this multiple of K before
+        per-point gathers beat one dense (cap_n, K) matmul.
+    down_n / down_g : downshift hysteresis. A running segment exits to
+        a smaller bucket when ``n_cand * down_n <= cap_n`` (resp.
+        ``gmax * down_g <= cap_g``); 0 disables that downshift axis.
+    refresh_in_pass : where the own-distance refresh of *maybe*
+        survivors runs on the compact backend. True = on the compacted
+        survivor buffer inside the candidate pass (no full-N rowwise
+        work, but capacity buckets are sized by the larger maybe-count);
+        False = as a full-N masked rowwise pass in
+        :func:`move_and_bounds` (costs one gather+dot over N per
+        iteration, but the refresh prunes the candidate set BEFORE
+        compaction, so buckets track the smaller need-count). Which
+        side wins is a measured shape property — gather-hostile wide-D
+        problems favour True, GEMM-strong small-D CPU shapes False.
+    lloyd_max_work : backend="auto" routes ``n * k <= lloyd_max_work``
+        straight to the dense Lloyd loop.
+    """
+    backend: str = "auto"
+    tile_n: int = 256
+    min_cap: int = 256
+    chunk: int = 2048
+    group_gather_factor: int = 4
+    down_n: int = 2
+    down_g: int = 4
+    refresh_in_pass: bool = False
+    lloyd_max_work: int = AUTO_LLOYD_MAX_WORK
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EngineConfig":
+        """Tolerant inverse of :meth:`to_dict` (unknown keys from a
+        newer/older cache version are dropped, missing keys default)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DEFAULT_CONFIG = EngineConfig()
+
+
+def use_groups_decision(*, cap_n: int, cap_g: int, l_max: int, k: int,
+                        chunk: int, group_gather_factor: int) -> bool:
+    """The compact pass's group-gather vs dense-GEMM crossover — THE
+    single copy of the rule, shared by the pass (trace-time), the
+    driver (per-segment stats), and the tuner (search space)."""
+    return (cap_g * l_max * group_gather_factor <= k) and cap_n <= chunk
+
+
+# --------------------------------------------------------------------------
 # shared per-iteration pieces (also consumed by compact.py / distributed.py)
 # --------------------------------------------------------------------------
 
 def move_and_bounds(points, centroids, assignments, ub, lb, groups,
-                    *, k: int, n_groups: int, reduce_sums=None):
+                    *, k: int, n_groups: int, reduce_sums=None,
+                    x2=None, refresh: bool = True):
     """Centroid move + triangle-inequality bound maintenance + the
     point-level filter. Pure traced function shared by every driver.
 
@@ -91,13 +192,30 @@ def move_and_bounds(points, centroids, assignments, ub, lb, groups,
     applied to the per-shard centroid partial sums (``lax.psum`` in the
     distributed fit; identity locally).
 
-    Returns ``(new_c, ub_t, lb_dec, need, shift, n_tightened)`` where
-    ``need`` marks points that must enter the candidate distance pass.
+    ``x2``: cached ``||x||^2`` row norms (computed once per fit by the
+    callers); ``None`` falls back to the diff-form rowwise distance.
+    The new centroids' ``||c||^2`` is computed here ONCE and returned
+    (``new_c2``) so the caller can share it with the following
+    candidate pass instead of recomputing it.
+
+    ``refresh=False`` (the compact backend) skips the own-distance
+    refresh entirely — the returned ``need`` is then the *maybe* mask
+    (``ub > glb`` on drift-inflated bounds) and the refresh happens on
+    the compacted survivor buffer inside
+    :func:`compact_candidate_pass` (``refresh_ub=True``), so the
+    full-N gather + rowwise pass disappears from the hot loop.
+
+    Returns ``(new_c, new_c2, ub_t, lb_dec, need, shift, n_tightened)``
+    where ``need`` marks points that must enter the candidate distance
+    pass and ``n_tightened`` counts the own-distance refreshes this
+    decision implies (performed here when ``refresh``, else by the
+    candidate pass).
     """
     sums, counts = centroid_sums(points, assignments, k)
     if reduce_sums is not None:
         sums, counts = reduce_sums(sums, counts)
     new_c = centroids_from_sums(sums, counts, centroids)
+    new_c2 = row_norms_sq(new_c)                       # once per iteration
 
     drift = jnp.linalg.norm(new_c - centroids, axis=-1)
     group_drift = jax.ops.segment_max(drift, groups, num_segments=n_groups)
@@ -106,22 +224,34 @@ def move_and_bounds(points, centroids, assignments, ub, lb, groups,
     lb_dec = jnp.maximum(lb - group_drift[None, :], 0.0)
     glb = jnp.min(lb_dec, axis=1)
     maybe = ub > glb
-    d_own = rowwise_dists(points, new_c[assignments])
-    ub_t = jnp.where(maybe, d_own, ub)
-    need = ub_t > glb
-    return new_c, ub_t, lb_dec, need, shift, jnp.sum(
+    if refresh:
+        if x2 is None:
+            d_own = rowwise_dists(points, new_c[assignments])
+        else:
+            own = new_c[assignments]
+            d_own = jnp.sqrt(jnp.maximum(
+                x2 - 2.0 * jnp.sum(points.astype(jnp.float32) * own,
+                                   axis=-1) + new_c2[assignments], 0.0))
+        ub_t = jnp.where(maybe, d_own, ub)
+        need = ub_t > glb
+    else:
+        ub_t = ub
+        need = maybe
+    return new_c, new_c2, ub_t, lb_dec, need, shift, jnp.sum(
         maybe.astype(jnp.float32))
 
 
 def dense_candidate_pass(points, new_c, assignments, ub_t, lb, groups, need,
-                         *, n_groups: int, opt_sq: bool = False):
+                         *, n_groups: int, opt_sq: bool = True,
+                         x2=None, c2=None):
     """Masked-dense candidate pass over all N points (oracle backend and
     the per-shard distributed step). Group filter applied as a mask —
     exact semantics, no skipped FLOPs.
 
-    ``opt_sq=True`` runs min/argmin on SQUARED distances and sqrts only
-    the reduced outputs (monotone => bit-identical results, one fewer
-    (N, K) sqrt pass + HBM round-trip).
+    ``opt_sq=True`` (default) runs min/argmin on SQUARED distances and
+    sqrts only the reduced outputs (monotone => bit-identical results,
+    one fewer (N, K) sqrt pass + HBM round-trip). ``x2``/``c2``:
+    cached squared norms (see :mod:`repro.core.distances`).
 
     Returns ``(new_assign, new_ub, new_lb, n_pairs)``.
     """
@@ -132,11 +262,13 @@ def dense_candidate_pass(points, new_c, assignments, ub_t, lb, groups, need,
     pairs = jnp.sum(cand.astype(jnp.float32))
 
     if opt_sq:
-        d_cand = jnp.where(cand, pairwise_sq_dists(points, new_c), jnp.inf)
+        d_cand = jnp.where(cand, pairwise_sq_dists(points, new_c, x2, c2),
+                           jnp.inf)
         best = jnp.argmin(d_cand, axis=1).astype(jnp.int32)
         best_d = jnp.sqrt(jnp.min(d_cand, axis=1))
     else:
-        d_cand = jnp.where(cand, pairwise_dists(points, new_c), jnp.inf)
+        d_cand = jnp.where(cand, pairwise_dists(points, new_c, x2, c2),
+                           jnp.inf)
         best = jnp.argmin(d_cand, axis=1).astype(jnp.int32)
         best_d = jnp.min(d_cand, axis=1)
     changed = best_d < ub_t
@@ -159,23 +291,38 @@ def compact_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
                            members, gsize, need, *, cap_n: int, cap_g: int,
                            n_groups: int, chunk: int = 2048,
                            use_groups: bool | None = None,
-                           opt_sq: bool = False):
+                           opt_sq: bool = True, x2=None, c2=None,
+                           refresh_ub: bool = False,
+                           group_gather_factor: int = 4):
     """Two-level compacted candidate pass.
 
     Point level: the ``need`` survivors are stream-compacted into a
     ``cap_n`` buffer (``cap_n`` must be >= the survivor count — the
     engine's while-loop cond guarantees it).
 
+    ``refresh_ub=True`` (the engine's compact backend): ``need`` is the
+    *maybe* mask from :func:`move_and_bounds` ``refresh=False`` and the
+    exact own-centroid distance is computed HERE, on the compacted
+    buffer only — points whose refreshed bound re-filters them simply
+    flow through with a tightened ``ub`` and an empty group set (their
+    distance rows are masked out), so the full-N rowwise refresh is
+    gone while the semantics stay bit-identical.
+
     Centroid level: each candidate's surviving groups are compacted
     into a ``cap_g``-slot bucket; only those groups' member centroids
     (``members``: (G, Lmax) int32, -1-padded) are gathered and scored.
-    When ``cap_g * Lmax`` is not meaningfully smaller than K the pass
-    statically falls back to one dense (cap_n, K) matmul — a BLAS GEMM
-    beats per-point gathers unless the group filter removes >= ~4x.
-    When the bucket IS compiled in, a runtime ``lax.cond`` spills to the
-    dense branch whenever some candidate's surviving-group count
-    exceeds ``cap_g`` — exactness never depends on the bucket guess;
-    the engine reads the returned ``gmax`` to upshift the next segment.
+    The gather-vs-GEMM crossover is :func:`use_groups_decision` (tuned
+    via ``group_gather_factor`` / ``chunk`` — see
+    :class:`EngineConfig`); ``use_groups=None`` applies it at trace
+    time. When the bucket IS compiled in, a runtime ``lax.cond``
+    spills to the dense branch whenever some candidate's
+    surviving-group count exceeds ``cap_g`` — exactness never depends
+    on the bucket guess; the engine reads the returned ``gmax`` to
+    upshift the next segment.
+
+    ``x2``/``c2``: cached squared norms (full-size ``x2`` is gathered
+    per survivor; ``c2`` is this iteration's centroid norms from
+    :func:`move_and_bounds`).
 
     Returns updated full-size ``(assignments, ub, lb, n_pairs, gmax)``.
     """
@@ -196,15 +343,27 @@ def compact_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
     c_ub = ub_t[idx]
     c_lb = lb[idx]                                            # (cap, G)
     c_as = assignments[idx]
+    if c2 is None:
+        c2 = row_norms_sq(new_c)
+    c_x2 = x2[idx] if x2 is not None else row_norms_sq(cpts)  # (cap,)
+    if refresh_ub:
+        # own-distance refresh on the compacted buffer (cap_n rows, not
+        # N): d(x, c_a) via the cached norms; invalid slots compute
+        # garbage that the scatter drops
+        own = new_c[c_as]
+        c_ub = jnp.sqrt(jnp.maximum(
+            c_x2 - 2.0 * jnp.sum(cpts.astype(jnp.float32) * own, axis=-1)
+            + c2[c_as], 0.0))
     gneed = (c_lb < c_ub[:, None]) & valid[:, None]           # (cap, G)
     gmax = jnp.max(jnp.sum(gneed.astype(jnp.int32), axis=1))
+    # rows that still need any distance work after the (possibly
+    # in-pass) refresh — the dense branch's honest eval count
+    n_rows = jnp.sum(jnp.any(gneed, axis=1).astype(jnp.float32))
 
     if use_groups is None:
-        # auto: bucket only when the group filter removes >= ~4x of K
-        # AND the candidate set is small — XLA per-point gathers beat
-        # the dense GEMM only below ~one chunk of survivors (measured
-        # on CPU; the TPU realisation is the pallas backend instead)
-        use_groups = (cap_g * l_max * 4 <= k) and cap_n <= chunk
+        use_groups = use_groups_decision(
+            cap_n=cap_n, cap_g=cap_g, l_max=l_max, k=k, chunk=chunk,
+            group_gather_factor=group_gather_factor)
 
     def dense_branch(_):
         # one (cap_n, K) GEMM on the survivors
@@ -213,12 +372,15 @@ def compact_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
             # min/argmin on squared distances (monotone => identical),
             # sqrt only the (cap,)/(cap, G) reductions: one fewer
             # (cap, K) sqrt pass per iteration.
-            d_cand = jnp.where(gmask, pairwise_sq_dists(cpts, new_c),
+            d_cand = jnp.where(gmask,
+                               pairwise_sq_dists(cpts, new_c, c_x2, c2),
                                jnp.inf)
             bid = jnp.argmin(d_cand, axis=1).astype(jnp.int32)
             bd = jnp.sqrt(jnp.min(d_cand, axis=1))
         else:
-            d_cand = jnp.where(gmask, pairwise_dists(cpts, new_c), jnp.inf)
+            d_cand = jnp.where(gmask,
+                               pairwise_dists(cpts, new_c, c_x2, c2),
+                               jnp.inf)
             bid = jnp.argmin(d_cand, axis=1).astype(jnp.int32)
             bd = jnp.min(d_cand, axis=1)
         chg = bd < c_ub
@@ -230,7 +392,7 @@ def compact_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
         if opt_sq:
             lb_comp = jnp.sqrt(lb_comp)
         new_clb = jnp.where(gneed, lb_comp, c_lb)
-        pairs = count.astype(jnp.float32) * k
+        pairs = n_rows * k
         return nas, nub, new_clb, pairs, chg
 
     def group_branch(_):
@@ -241,18 +403,17 @@ def compact_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
             rows[:, None], gslot].set(
             jnp.broadcast_to(jnp.arange(n_groups, dtype=jnp.int32),
                              (cap_n, n_groups)), mode="drop")
-        c2 = jnp.sum(new_c.astype(jnp.float32) ** 2, axis=-1)  # (K,)
 
-        def bucket_pass(x, gs, cub, cas):
+        def bucket_pass(x, x2v, gs, cub, cas):
             mem = jnp.take(members, gs, axis=0, mode="fill",
                            fill_value=-1)                # (ch, cap_g, L)
             mem_s = jnp.maximum(mem, 0)
             csel = new_c[mem_s]                          # (ch, cap_g, L, D)
             xf = x.astype(jnp.float32)
-            x2 = jnp.sum(xf * xf, axis=-1)[:, None, None]
             cross = jnp.einsum("nd,ngld->ngl", xf,
                                csel.astype(jnp.float32))
-            d2 = jnp.maximum(x2 - 2.0 * cross + c2[mem_s], 0.0)
+            d2 = jnp.maximum(x2v[:, None, None] - 2.0 * cross + c2[mem_s],
+                             0.0)
             ch = x.shape[0]
             # squared-distance reductions, sqrt only the outputs
             dm = jnp.where(mem >= 0, d2, jnp.inf).reshape(ch, -1)
@@ -268,7 +429,7 @@ def compact_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
                                     axis=2))
             return nas, nub, smin, chg
 
-        nas, nub, smin, chg = bucket_pass(cpts, gsel, c_ub, c_as)
+        nas, nub, smin, chg = bucket_pass(cpts, c_x2, gsel, c_ub, c_as)
         new_clb = c_lb.at[rows[:, None], gsel].set(smin, mode="drop")
         pairs = jnp.sum(gneed.astype(jnp.float32) * gsize[None, :])
         return nas, nub, new_clb, pairs, chg
@@ -293,14 +454,17 @@ def compact_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
 
 def pallas_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
                           members, gsize, need, *, n_groups: int,
-                          tile_n: int = 256, interpret: bool = False):
+                          tile_n: int = 256, interpret: bool = False,
+                          x2=None, c2=None):
     """Candidate pass through the grouped block-skip Pallas kernel.
 
     The (point, group) filter decisions become a (N/tile_n, G) block
     mask; the kernel runs the distance matmul only for live blocks and
     returns the global (min, argmin) plus per-group (min, argmin,
     second-min) — exactly what the Yinyang lower-bound refresh needs,
-    with no (N, K) distance matrix ever materialised.
+    with no (N, K) distance matrix ever materialised. Cached squared
+    norms (``x2`` per point, ``c2`` per centroid) are threaded into
+    the kernel so it never recomputes them.
     """
     from ..kernels import build_group_block_mask, grouped_assign
 
@@ -308,10 +472,12 @@ def pallas_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
     rows = jnp.arange(n)
     group_need = need[:, None] & (lb < ub_t[:, None])              # (N, G)
     mask = build_group_block_mask(group_need, tile_n=tile_n)       # (gn, G)
-    c_grouped = new_c[jnp.maximum(members, 0)]              # (G, Lmax, D)
+    mem_s = jnp.maximum(members, 0)
+    c_grouped = new_c[mem_s]                                # (G, Lmax, D)
+    c2g = None if c2 is None else c2[mem_s]                 # (G, Lmax)
     best2, idx, gmin, garg, gmin2 = grouped_assign(
         points, c_grouped, members, mask, tile_n=tile_n,
-        interpret=interpret)
+        interpret=interpret, x2=x2, c2g=c2g)
 
     best_d = jnp.sqrt(best2)
     changed = best_d < ub_t
@@ -338,12 +504,16 @@ def pallas_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
 class EngineCarry(NamedTuple):
     """while_loop carry. ``ub``/``lb``/``need`` describe the PENDING
     candidate pass (iteration ``iteration``'s second half), which the
-    next loop body — or the epilogue — executes."""
+    next loop body — or the epilogue — executes. ``x2`` is the
+    fit-constant point norms; ``c2`` is the CURRENT centroids' norms
+    (refreshed once per iteration by :func:`move_and_bounds`)."""
     iteration: jnp.ndarray    # int32: completed move+bounds iterations
     centroids: jnp.ndarray    # (K, D)
+    c2: jnp.ndarray           # (K,) ||centroids||^2, once per iteration
     assignments: jnp.ndarray  # (N,)
     ub: jnp.ndarray           # (N,) tightened upper bounds
     lb: jnp.ndarray           # (N, G) decayed lower bounds
+    x2: jnp.ndarray           # (N,) ||x||^2, computed ONCE per fit
     need: jnp.ndarray         # (N,) pending candidate mask
     n_cand: jnp.ndarray       # int32 = sum(need)
     gmax: jnp.ndarray         # int32 max surviving groups per candidate,
@@ -355,40 +525,59 @@ class EngineCarry(NamedTuple):
 @dataclasses.dataclass
 class EngineStats:
     """Execution telemetry: the 'no per-iteration host sync' claim is
-    checkable as ``host_syncs << n_iters``."""
+    checkable as ``host_syncs << n_iters``; ``use_groups`` records the
+    gather-vs-GEMM decision per compact segment (parallel to
+    ``caps_history``); ``x2_evals`` states the norm-carry contract of
+    the constructed trace — ``||x||^2`` enters via ``EngineCarry.x2``
+    so exactly one full-N norm computation exists per fit by
+    construction (it is structural, not a runtime counter;
+    ``tests/test_tune.py`` verifies it by counting real
+    ``row_norms_sq`` calls); ``config`` is the resolved
+    :class:`EngineConfig` actually used."""
     backend: str = ""
     n_iters: int = 0
     host_syncs: int = 0
     bucket_switches: int = 0
     caps_history: list = dataclasses.field(default_factory=list)
+    use_groups: list = dataclasses.field(default_factory=list)
+    x2_evals: int = 0
+    config: dict = dataclasses.field(default_factory=dict)
 
 
 def _candidate_pass(backend, points, carry, groups, members, gsize, *,
-                    n_groups, cap_n, cap_g, chunk, tile_n, interpret):
+                    n_groups, cap_n, cap_g, chunk, tile_n, interpret,
+                    use_groups, group_gather_factor,
+                    refresh_in_pass=False):
     """Backend dispatch, normalised to (assign, ub, lb, pairs, gmax)."""
     if backend == "oracle":
         out = dense_candidate_pass(
             points, carry.centroids, carry.assignments, carry.ub, carry.lb,
-            groups, carry.need, n_groups=n_groups)
+            groups, carry.need, n_groups=n_groups, x2=carry.x2, c2=carry.c2)
         return out + (jnp.int32(0),)
     if backend == "pallas":
         out = pallas_candidate_pass(
             points, carry.centroids, carry.assignments, carry.ub, carry.lb,
             groups, members, gsize, carry.need, n_groups=n_groups,
-            tile_n=tile_n, interpret=interpret)
+            tile_n=tile_n, interpret=interpret, x2=carry.x2, c2=carry.c2)
         return out + (jnp.int32(0),)
     return compact_candidate_pass(
         points, carry.centroids, carry.assignments, carry.ub, carry.lb,
         groups, members, gsize, carry.need, cap_n=cap_n, cap_g=cap_g,
-        n_groups=n_groups, chunk=chunk, opt_sq=True)
+        n_groups=n_groups, chunk=chunk, opt_sq=True, x2=carry.x2,
+        c2=carry.c2, refresh_ub=refresh_in_pass, use_groups=use_groups,
+        group_gather_factor=group_gather_factor)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "backend", "k", "n_groups", "cap_n", "cap_g", "max_iters", "tol",
-    "min_cap", "allow_downshift", "chunk", "tile_n", "interpret"))
+    "min_cap", "allow_downshift", "chunk", "tile_n", "interpret",
+    "use_groups", "group_gather_factor", "down_n", "down_g",
+    "refresh_in_pass"))
 def _run_loop(points, carry, groups, members, gsize, *, backend, k,
               n_groups, cap_n, cap_g, max_iters, tol, min_cap,
-              allow_downshift, chunk, tile_n, interpret):
+              allow_downshift, chunk, tile_n, interpret, use_groups=None,
+              group_gather_factor=4, down_n=2, down_g=4,
+              refresh_in_pass=False):
     """One capacity bucket's worth of device-resident iterations.
 
     Exits when converged / out of iterations (terminal), or — compact
@@ -403,15 +592,24 @@ def _run_loop(points, carry, groups, members, gsize, *, backend, k,
             return active
         fits = jnp.logical_and(c.n_cand <= cap_n, c.gmax <= cap_g)
         ok = jnp.logical_and(active, fits)
-        if allow_downshift:
+        if allow_downshift and (down_n or down_g):
             # exit when a strictly smaller point bucket would fit — the
             # candidate pass is linear in cap_n, so one sync (~ms) buys
             # back every decay-phase iteration's padding. The group cap
             # only affects the bucketed pass's minor axis; chase it
-            # lazily (4x) to avoid segment churn.
-            down = jnp.logical_or(
-                jnp.logical_and(c.n_cand * 2 <= cap_n, cap_n > min_cap),
-                jnp.logical_and(c.gmax * 4 <= cap_g, cap_g > 1))
+            # lazily to avoid segment churn. The factors are the tuned
+            # hysteresis (EngineConfig.down_n / down_g; 0 disables).
+            down = jnp.bool_(False)
+            if down_n:
+                down = jnp.logical_or(down, jnp.logical_and(
+                    c.n_cand * down_n <= cap_n, cap_n > min_cap))
+            if down_g:
+                # gmax == 0 means the last pass saw no candidates, not
+                # that one group slot suffices — never downshift on it
+                down = jnp.logical_or(down, jnp.logical_and(
+                    jnp.logical_and(c.gmax > 0,
+                                    c.gmax * down_g <= cap_g),
+                    cap_g > 1))
             ok = jnp.logical_and(ok, jnp.logical_not(down))
         return ok
 
@@ -419,13 +617,17 @@ def _run_loop(points, carry, groups, members, gsize, *, backend, k,
         new_as, new_ub, new_lb, pairs, gmax = _candidate_pass(
             backend, points, c, groups, members, gsize, n_groups=n_groups,
             cap_n=cap_n, cap_g=cap_g, chunk=chunk, tile_n=tile_n,
-            interpret=interpret)
-        new_c, ub_t, lb_dec, need, shift, tightened = move_and_bounds(
-            points, c.centroids, new_as, new_ub, new_lb, groups,
-            k=k, n_groups=n_groups)
+            interpret=interpret, use_groups=use_groups,
+            group_gather_factor=group_gather_factor,
+            refresh_in_pass=refresh_in_pass)
+        new_c, new_c2, ub_t, lb_dec, need, shift, tightened = \
+            move_and_bounds(points, c.centroids, new_as, new_ub, new_lb,
+                            groups, k=k, n_groups=n_groups, x2=c.x2,
+                            refresh=not (backend == "compact"
+                                         and refresh_in_pass))
         n_cand = jnp.sum(need.astype(jnp.int32))
-        return EngineCarry(c.iteration + 1, new_c, new_as, ub_t, lb_dec,
-                           need, n_cand, gmax, shift,
+        return EngineCarry(c.iteration + 1, new_c, new_c2, new_as, ub_t,
+                           lb_dec, c.x2, need, n_cand, gmax, shift,
                            c.evals.add(pairs).add(tightened))
 
     return jax.lax.while_loop(cond, body, carry)
@@ -433,24 +635,44 @@ def _run_loop(points, carry, groups, members, gsize, *, backend, k,
 
 @functools.partial(jax.jit, static_argnames=(
     "backend", "n_groups", "cap_n", "cap_g", "chunk", "tile_n",
-    "interpret"))
+    "interpret", "use_groups", "group_gather_factor", "refresh_in_pass"))
 def _epilogue(points, carry, groups, members, gsize, *, backend, n_groups,
-              cap_n, cap_g, chunk, tile_n, interpret):
+              cap_n, cap_g, chunk, tile_n, interpret, use_groups=None,
+              group_gather_factor=4, refresh_in_pass=False):
     """Final pending candidate pass + inertia, fused into one program."""
     new_as, _, _, pairs, _ = _candidate_pass(
         backend, points, carry, groups, members, gsize, n_groups=n_groups,
         cap_n=cap_n, cap_g=cap_g, chunk=chunk, tile_n=tile_n,
-        interpret=interpret)
+        interpret=interpret, use_groups=use_groups,
+        group_gather_factor=group_gather_factor,
+        refresh_in_pass=refresh_in_pass)
     evals = carry.evals.add(pairs)
     d = rowwise_dists(points, carry.centroids[new_as])
     return new_as, evals.total(), jnp.sum(d * d)
 
 
+@functools.partial(jax.jit, static_argnames=("n_groups",))
+def _init_carry(points, init_c, groups, *, n_groups):
+    """Fused setup: point norms (THE once-per-fit ``||x||^2``), initial
+    filter state, and the initial loop carry — one dispatch instead of
+    the ~8 eager ops the old driver issued per fit."""
+    n = points.shape[0]
+    x2 = row_norms_sq(points)
+    c2 = row_norms_sq(init_c.astype(jnp.float32))
+    state0 = _init_filter_state(points, init_c, groups, n_groups,
+                                x2=x2, c2=c2)
+    return EngineCarry(
+        jnp.int32(0), state0.centroids, c2, state0.assignments, state0.ub,
+        state0.lb, x2, jnp.zeros((n,), bool), jnp.int32(0), jnp.int32(0),
+        jnp.float32(jnp.inf), state0.distance_evals)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "backend", "k", "n_groups", "max_iters", "tol", "chunk", "tile_n",
-    "interpret"))
+    "interpret", "use_groups", "group_gather_factor", "refresh_in_pass"))
 def _fit_fused(points, init_c, *, backend, k, n_groups, max_iters, tol,
-               chunk, tile_n, interpret):
+               chunk, tile_n, interpret, use_groups=None,
+               group_gather_factor=4, refresh_in_pass=False):
     """Whole fit — grouping, init, loop, epilogue — as ONE program.
 
     Used for small problems (and exercised by tests for every backend):
@@ -473,21 +695,21 @@ def _fit_fused(points, init_c, *, backend, k, n_groups, max_iters, tol,
     gsize = jax.ops.segment_sum(jnp.ones((k,), jnp.float32), groups,
                                 num_segments=n_groups)
 
-    state0 = _init_filter_state(points, init_c, groups, n_groups)
-    carry = EngineCarry(
-        jnp.int32(0), state0.centroids, state0.assignments, state0.ub,
-        state0.lb, jnp.zeros((n,), bool), jnp.int32(0), jnp.int32(0),
-        jnp.float32(jnp.inf), state0.distance_evals)
-
+    carry = _init_carry(points, init_c, groups, n_groups=n_groups)
     carry = _run_loop(points, carry, groups, members, gsize,
                       backend=backend, k=k, n_groups=n_groups, cap_n=n,
                       cap_g=n_groups, max_iters=max_iters, tol=tol,
                       min_cap=n, allow_downshift=False, chunk=chunk,
-                      tile_n=tile_n, interpret=interpret)
+                      tile_n=tile_n, interpret=interpret,
+                      use_groups=use_groups,
+                      group_gather_factor=group_gather_factor,
+                      refresh_in_pass=refresh_in_pass)
     new_as, evals, inertia = _epilogue(
         points, carry, groups, members, gsize, backend=backend,
         n_groups=n_groups, cap_n=n, cap_g=n_groups, chunk=chunk,
-        tile_n=tile_n, interpret=interpret)
+        tile_n=tile_n, interpret=interpret, use_groups=use_groups,
+        group_gather_factor=group_gather_factor,
+        refresh_in_pass=refresh_in_pass)
     return carry.centroids, new_as, carry.iteration, evals, inertia
 
 
@@ -510,34 +732,103 @@ def build_group_tables(groups_np: np.ndarray, n_groups: int):
     return jnp.asarray(members_np), jnp.asarray(counts.astype(np.float32))
 
 
+def _resolve_config(*, backend, tile_n, min_cap, chunk, config, tune,
+                    n, k, d):
+    """Resolve the effective :class:`EngineConfig` for this fit.
+
+    Precedence per knob: explicit ``fit`` kwarg > explicit ``config``
+    object > tuned cache entry (``tune != "off"``) > built-in default.
+    The caller's ``backend`` always wins unless it is ``"auto"``.
+    Returns ``(config, resolved_backend)`` where the backend may be
+    ``"lloyd"``.
+    """
+    cfg = DEFAULT_CONFIG
+    if config is None and tune != "off":
+        # "force" has already run the search by the time we get here
+        # (fit() materialises it into an explicit config); both active
+        # modes consult the persistent cache.
+        from .. import tune as _tune
+        cfg = _tune.lookup(n=n, k=k, d=d) or cfg
+    if config is not None:
+        cfg = config
+    over = {}
+    if tile_n is not None:
+        over["tile_n"] = int(tile_n)
+    if min_cap is not None:
+        over["min_cap"] = int(min_cap)
+    if chunk is not None:
+        over["chunk"] = int(chunk)
+    if over:
+        cfg = cfg.replace(**over)
+
+    resolved = backend
+    if resolved == "auto":
+        resolved = cfg.backend
+    if resolved == "auto":
+        if n * k <= cfg.lloyd_max_work:
+            resolved = "lloyd"
+        else:
+            resolved = "pallas" if jax.default_backend() == "tpu" \
+                else "compact"
+    return cfg, resolved
+
+
 def fit(points, init_centroids, *, n_groups: int | None = None,
         max_iters: int = 100, tol: float = 1e-4, backend: str = "auto",
-        tile_n: int = 256, min_cap: int = 256, chunk: int = 2048,
-        interpret: bool | None = None, max_bucket_switches: int = 32,
-        return_stats: bool = False):
+        tile_n: int | None = None, min_cap: int | None = None,
+        chunk: int | None = None, interpret: bool | None = None,
+        max_bucket_switches: int = 32, return_stats: bool = False,
+        config: EngineConfig | None = None, tune: str = "auto"):
     """Run filtered K-means fully device-resident.
 
     See the module docstring for backend semantics. ``interpret=None``
     auto-enables Pallas interpreter mode off-TPU, so
-    ``backend='pallas'`` works (slowly) anywhere. Returns a
-    :class:`~repro.core.kmeans.KMeansResult`; with
+    ``backend='pallas'`` works (slowly) anywhere.
+
+    ``config`` pins an explicit :class:`EngineConfig`; ``tune``
+    controls the per-(platform, N, K, D) autotuning cache
+    (:mod:`repro.tune`): ``"auto"`` (default) uses a cached winner when
+    one exists, ``"force"`` additionally runs the measured search on a
+    cache miss and persists the result, ``"off"`` uses built-in
+    defaults. Tuning changes wall-clock only — assignments and inertia
+    are bit-identical across configurations. Individual kwargs
+    (``tile_n``/``min_cap``/``chunk``) override both.
+
+    Returns a :class:`~repro.core.kmeans.KMeansResult`; with
     ``return_stats=True`` returns ``(result, EngineStats)``.
     """
-    if backend not in BACKENDS + ("auto",):
+    if backend not in BACKENDS + ("auto", "lloyd"):
         raise ValueError(f"unknown engine backend {backend!r}; "
-                         f"expected one of {BACKENDS + ('auto',)}")
+                         f"expected one of "
+                         f"{BACKENDS + ('auto', 'lloyd')}")
+    if tune not in ("auto", "off", "force"):
+        raise ValueError(f"unknown tune mode {tune!r}; expected "
+                         f"'auto', 'off' or 'force'")
     points = jnp.asarray(points)
-    init_c = jnp.asarray(init_centroids, jnp.float32)
+    init_c = jnp.asarray(init_centroids)
+    if init_c.dtype != jnp.float32:
+        init_c = init_c.astype(jnp.float32)
     k = init_c.shape[0]
-    n = points.shape[0]
-    if backend == "auto":
-        if n * k <= AUTO_LLOYD_MAX_WORK:
-            res = _lloyd_jit(points, init_c, max_iters=int(max_iters),
-                             tol=float(tol))
-            stats = EngineStats(backend="lloyd", n_iters=int(res.n_iters),
-                                host_syncs=1)
-            return (res, stats) if return_stats else res
-        backend = "pallas" if jax.default_backend() == "tpu" else "compact"
+    n, d = points.shape
+
+    if tune == "force" and config is None:
+        from .. import tune as _tune
+        config = _tune.get_or_tune(
+            points, init_c, n_groups=n_groups, max_iters=int(max_iters),
+            tol=float(tol))
+    cfg, backend = _resolve_config(
+        backend=backend, tile_n=tile_n, min_cap=min_cap, chunk=chunk,
+        config=config, tune=tune, n=n, k=k, d=d)
+
+    if backend == "lloyd":
+        res = _lloyd_jit(points, init_c, max_iters=int(max_iters),
+                         tol=float(tol))
+        if not return_stats:
+            return res              # keep the tiny-problem route lean:
+                                    # no stats blocking / dict building
+        stats = EngineStats(backend="lloyd", n_iters=int(res.n_iters),
+                            host_syncs=1, config=cfg.to_dict())
+        return res, stats
     if interpret is None:
         interpret = backend == "pallas" and jax.default_backend() != "tpu"
     if n_groups is None:
@@ -545,17 +836,27 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     n_groups = int(min(n_groups, k))
     tol = float(tol)
 
-    stats = EngineStats(backend=backend)
-    cap_floor = min(min_cap, n)
+    stats = EngineStats(backend=backend, x2_evals=1, config=cfg.to_dict())
+    cap_floor = min(cfg.min_cap, n)
+    common_kw = dict(chunk=cfg.chunk, tile_n=cfg.tile_n,
+                     group_gather_factor=cfg.group_gather_factor,
+                     refresh_in_pass=cfg.refresh_in_pass,
+                     interpret=bool(interpret))
     if n <= 4 * cap_floor:
         # small problem: eager setup + bucket churn costs more than the
         # whole fit — run the fully-fused single-program path
+        ug = use_groups_decision(
+            cap_n=n, cap_g=n_groups, l_max=k, k=k, chunk=cfg.chunk,
+            group_gather_factor=cfg.group_gather_factor) \
+            if backend == "compact" else None
         c, a, it, evals, inertia = _fit_fused(
             points, init_c, backend=backend, k=k, n_groups=n_groups,
-            max_iters=int(max_iters), tol=tol, chunk=int(chunk),
-            tile_n=int(tile_n), interpret=bool(interpret))
+            max_iters=int(max_iters), tol=tol, use_groups=ug, **common_kw)
         stats.host_syncs = 1
         stats.n_iters = int(it)
+        if backend == "compact":
+            stats.caps_history.append((n, n_groups))
+            stats.use_groups.append(bool(ug))
         result = KMeansResult(c, a, it, evals, inertia)
         return (result, stats) if return_stats else result
 
@@ -565,12 +866,9 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     groups_np = np.asarray(jax.device_get(groups))
     stats.host_syncs += 1
     members, gsize = build_group_tables(groups_np, n_groups)
+    l_max = int(members.shape[1])
 
-    state0 = _init_filter_state(points, init_c, groups, n_groups)
-    carry = EngineCarry(
-        jnp.int32(0), state0.centroids, state0.assignments, state0.ub,
-        state0.lb, jnp.zeros((n,), bool), jnp.int32(0), jnp.int32(0),
-        jnp.float32(jnp.inf), state0.distance_evals)
+    carry = _init_carry(points, init_c, groups, n_groups=n_groups)
 
     # start tiny: the first loop body's pending candidate pass is empty
     # (carry.need = 0), so a full-capacity program would burn one whole
@@ -579,15 +877,25 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     cap_n, cap_g = cap_floor, 1
     loop_kw = dict(backend=backend, k=k, n_groups=n_groups,
                    max_iters=int(max_iters), tol=tol, min_cap=cap_floor,
-                   chunk=int(chunk), tile_n=int(tile_n),
-                   interpret=bool(interpret))
+                   down_n=cfg.down_n, down_g=cfg.down_g, **common_kw)
+
+    def _ug(cn, cg):
+        if backend != "compact":
+            return None
+        return use_groups_decision(
+            cap_n=cn, cap_g=cg, l_max=l_max, k=k, chunk=cfg.chunk,
+            group_gather_factor=cfg.group_gather_factor)
 
     while True:
+        ug = _ug(cap_n, cap_g)
         stats.caps_history.append((cap_n, cap_g))
+        if backend == "compact":
+            stats.use_groups.append(bool(ug))
         allow_down = stats.bucket_switches < max_bucket_switches
         carry = _run_loop(points, carry, groups, members, gsize,
                           cap_n=cap_n, cap_g=cap_g,
-                          allow_downshift=allow_down, **loop_kw)
+                          allow_downshift=allow_down, use_groups=ug,
+                          **loop_kw)
         it, nc, gm, sh = jax.device_get(
             (carry.iteration, carry.n_cand, carry.gmax, carry.shift))
         stats.host_syncs += 1
@@ -600,7 +908,11 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
             cap_n, cap_g = _bucket_cap(n, cap_floor, n), n_groups
         else:
             cap_n = _bucket_cap(int(nc), cap_floor, n)
-            cap_g = _bucket_cap(int(gm), 1, n_groups)
+            # gmax == 0 means no candidate pass has run at this bucket
+            # yet (the opening probe segment): guess the full group
+            # count rather than burning a whole segment discovering it
+            cap_g = _bucket_cap(int(gm), 1, n_groups) if int(gm) > 0 \
+                else n_groups
     stats.n_iters = int(it)
 
     # epilogue: the final iteration's pending candidate pass + inertia.
@@ -613,8 +925,8 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
         ecap_n, ecap_g = n, n_groups
     assignments, evals, inertia = _epilogue(
         points, carry, groups, members, gsize, backend=backend,
-        n_groups=n_groups, cap_n=ecap_n, cap_g=ecap_g, chunk=int(chunk),
-        tile_n=int(tile_n), interpret=bool(interpret))
+        n_groups=n_groups, cap_n=ecap_n, cap_g=ecap_g,
+        use_groups=_ug(ecap_n, ecap_g), **common_kw)
 
     result = KMeansResult(carry.centroids, assignments, carry.iteration,
                           evals, inertia)
@@ -668,10 +980,10 @@ def stream_bounds(points, centroids, assignments, ub, lb):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "n_groups", "cap_n", "cap_g", "chunk"))
+    "k", "n_groups", "cap_n", "cap_g", "chunk", "group_gather_factor"))
 def stream_update(points, centroids, counts, decay, groups, members, gsize,
                   assignments, ub_t, lb, need, *, k, n_groups, cap_n,
-                  cap_g, chunk=2048):
+                  cap_g, chunk=2048, group_gather_factor=4):
     """One mini-batch against EXTERNAL carry (centroids + effective
     counts): the engine's two-level compacted candidate pass, then a
     decayed count-weighted centroid update, then post-move bound decay.
@@ -685,11 +997,15 @@ def stream_update(points, centroids, counts, decay, groups, members, gsize,
     it via :func:`stream_bounds`); ``cap_g`` is a guess — the pass's
     ``lax.cond`` spills to the dense branch when it is exceeded, and
     the returned ``gmax`` recalibrates the next visit.
+    ``group_gather_factor`` / ``chunk`` come from the tuned
+    :class:`EngineConfig` when the caller enables tuning.
     """
+    x2 = row_norms_sq(points)                 # once per batch
+    c2 = row_norms_sq(centroids)
     new_as, nub, nlb, pairs, gmax = compact_candidate_pass(
         points, centroids, assignments, ub_t, lb, groups, members, gsize,
         need, cap_n=cap_n, cap_g=cap_g, n_groups=n_groups, chunk=chunk,
-        opt_sq=True)
+        opt_sq=True, x2=x2, c2=c2, group_gather_factor=group_gather_factor)
     bsums, bcounts = centroid_sums(points, new_as, k)
 
     dec = counts * decay

@@ -24,7 +24,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .distances import pairwise_dists, rowwise_dists
+from .distances import (pairwise_dists, pairwise_sq_dists, row_norms_sq,
+                        rowwise_dists)
 
 
 # --------------------------------------------------------------------------
@@ -170,28 +171,43 @@ class FilterState(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnums=(3,))
-def _init_filter_state(points, centroids, groups, n_groups):
+def _init_filter_state(points, centroids, groups, n_groups, x2=None,
+                       c2=None):
+    """Initial exact assignment + bounds. ``x2``/``c2``: optional cached
+    squared norms (the engine computes ``||x||^2`` once per fit and
+    threads it through; passing them here keeps that single copy).
+    Reductions run on SQUARED distances; only the (N,) / (N, G)
+    outputs are sqrt'ed (monotone => identical bounds, one fewer
+    (N, K) sqrt pass)."""
     n, k = points.shape[0], centroids.shape[0]
-    d = pairwise_dists(points, centroids)                       # (N, K)
-    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
-    ub = jnp.min(d, axis=1)
+    d2 = pairwise_sq_dists(points, centroids, x2, c2)           # (N, K)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    ub = jnp.sqrt(jnp.min(d2, axis=1))
     # lb[x, g] = min over centroids in g, excluding the assigned one.
-    d_excl = d.at[jnp.arange(n), assign].set(jnp.inf)
-    lb = jax.ops.segment_min(d_excl.T, groups,
-                             num_segments=n_groups).T         # (N, G)
+    d2_excl = d2.at[jnp.arange(n), assign].set(jnp.inf)
+    lb = jnp.sqrt(jax.ops.segment_min(d2_excl.T, groups,
+                                      num_segments=n_groups).T)  # (N, G)
     return FilterState(jnp.int32(0), centroids.astype(jnp.float32), assign,
                        ub, lb, jnp.float32(jnp.inf),
                        EvalCount.of(jnp.float32(n) * k))
 
 
-def _filtered_step(points, state: FilterState, groups, n_groups: int, k: int):
+def _filtered_step(points, state: FilterState, groups, n_groups: int, k: int,
+                   x2=None):
     """One KPynq iteration: centroid move -> bound maintenance ->
-    point-level filter -> group-level filter -> masked distance pass."""
+    point-level filter -> group-level filter -> masked distance pass.
+
+    ``x2``: cached ``||x||^2`` (``yinyang`` computes it once per fit);
+    the new centroids' ``||c||^2`` is computed once here and shared by
+    the own-distance refresh and the masked pass. Reductions run on
+    SQUARED distances (monotone, so results are identical) and sqrt
+    only the reduced outputs."""
     n = points.shape[0]
     rows = jnp.arange(n)
 
     # 1. move centroids from current assignments; measure drift
     new_c, _ = update_centroids(points, state.assignments, k, state.centroids)
+    c2 = row_norms_sq(new_c)                       # once per iteration
     drift = jnp.linalg.norm(new_c - state.centroids, axis=-1)          # (K,)
     group_drift = jax.ops.segment_max(drift, groups, num_segments=n_groups)
     shift = jnp.max(drift)
@@ -204,7 +220,13 @@ def _filtered_step(points, state: FilterState, groups, n_groups: int, k: int):
     # 3. POINT-LEVEL FILTER: ub < min_g lb[g]  =>  zero distance work
     maybe = ub > glb
     # tighten ub with one exact distance for surviving points
-    d_own = rowwise_dists(points, new_c[state.assignments])
+    if x2 is None:
+        d_own = rowwise_dists(points, new_c[state.assignments])
+    else:
+        own = new_c[state.assignments]
+        d_own = jnp.sqrt(jnp.maximum(
+            x2 - 2.0 * jnp.sum(points.astype(jnp.float32) * own, axis=-1)
+            + c2[state.assignments], 0.0))
     ub_t = jnp.where(maybe, d_own, ub)
     need = ub_t > glb
     evals = state.distance_evals.add(jnp.sum(maybe.astype(jnp.float32)))
@@ -217,18 +239,18 @@ def _filtered_step(points, state: FilterState, groups, n_groups: int, k: int):
     # 5. masked distance pass (the Distance Calculator). Algorithmically
     #    only `cand` entries are needed; the Pallas kernel skips
     #    non-candidate blocks — here we mask for exact semantics.
-    d_all = pairwise_dists(points, new_c)
-    d_cand = jnp.where(cand, d_all, jnp.inf)
-    best_other = jnp.argmin(d_cand, axis=1).astype(jnp.int32)
-    best_other_d = jnp.min(d_cand, axis=1)
+    d2_all = pairwise_sq_dists(points, new_c, x2, c2)
+    d2_cand = jnp.where(cand, d2_all, jnp.inf)
+    best_other = jnp.argmin(d2_cand, axis=1).astype(jnp.int32)
+    best_other_d = jnp.sqrt(jnp.min(d2_cand, axis=1))
     new_assign = jnp.where(best_other_d < ub_t, best_other, state.assignments)
     new_ub = jnp.minimum(ub_t, best_other_d)
 
     # 6. refresh lb for computed groups: min distance in group excluding
     #    the (new) assigned centroid; untouched groups keep decayed lb.
-    d_excl = d_cand.at[rows, new_assign].set(jnp.inf)
-    lb_comp = jax.ops.segment_min(d_excl.T, groups,
-                                  num_segments=n_groups).T             # (N, G)
+    d2_excl = d2_cand.at[rows, new_assign].set(jnp.inf)
+    lb_comp = jnp.sqrt(jax.ops.segment_min(d2_excl.T, groups,
+                                           num_segments=n_groups).T)   # (N, G)
     new_lb = jnp.where(group_need, lb_comp, lb)
     # Exactness fix (Yinyang): when x is reassigned away from its old
     # centroid b, b re-enters the "non-assigned" pool of its group, at
@@ -252,14 +274,15 @@ def yinyang(points, init_centroids, n_groups: int | None = None,
         n_groups = max(k // 10, 1)
     n_groups = int(min(n_groups, k))
     groups = group_centroids(init_centroids.astype(jnp.float32), n_groups)
+    x2 = row_norms_sq(points)                    # ONCE per fit
     state0 = _init_filter_state(points, init_centroids.astype(jnp.float32),
-                                groups, n_groups)
+                                groups, n_groups, x2=x2)
 
     def cond(state):
         return jnp.logical_and(state.iteration < max_iters, state.shift > tol)
 
     def body(state):
-        return _filtered_step(points, state, groups, n_groups, k)
+        return _filtered_step(points, state, groups, n_groups, k, x2=x2)
 
     state = jax.lax.while_loop(cond, body, state0)
     return KMeansResult(state.centroids, state.assignments, state.iteration,

@@ -27,8 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _filtered_assign_kernel(mask_ref, x_ref, c_ref, best_ref, idx_ref,
-                            *, tile_k: int):
+def _filtered_assign_kernel(mask_ref, x_ref, x2_ref, c_ref, c2_ref,
+                            best_ref, idx_ref, *, tile_k: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -40,8 +40,10 @@ def _filtered_assign_kernel(mask_ref, x_ref, c_ref, best_ref, idx_ref,
     def _compute():
         x = x_ref[...].astype(jnp.float32)                 # (tn, D)
         c = c_ref[...].astype(jnp.float32)                 # (tk, D)
-        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
-        c2 = jnp.sum(c * c, axis=-1)[None, :]
+        # squared norms arrive precomputed (cached by the caller across
+        # iterations) — the kernel only does the cross term
+        x2 = x2_ref[...]                                   # (tn, 1)
+        c2 = c2_ref[...].reshape(1, tile_k)                # (1, tk)
         cross = jax.lax.dot_general(
             x, c, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -59,11 +61,16 @@ def _filtered_assign_kernel(mask_ref, x_ref, c_ref, best_ref, idx_ref,
 def filtered_assign(x: jnp.ndarray, c: jnp.ndarray,
                     block_mask: jnp.ndarray, *,
                     tile_n: int = 256, tile_k: int = 128,
-                    interpret: bool = False):
+                    interpret: bool = False,
+                    x2: jnp.ndarray | None = None,
+                    c2: jnp.ndarray | None = None):
     """Block-skipping nearest-centroid search.
 
     x: (N, D); c: (K, D); block_mask: (ceil(N/tile_n), ceil(K/tile_k))
-    bool/int — True where the block must be computed.
+    bool/int — True where the block must be computed. ``x2`` (N,) /
+    ``c2`` (K,): optional precomputed squared norms (callers that fit
+    iteratively cache them across calls; ``None`` computes locally —
+    identical results).
     Returns (min_sq_dist (N,) fp32, argmin (N,) int32); fully-skipped
     rows yield (+inf, -1).
     """
@@ -77,6 +84,16 @@ def filtered_assign(x: jnp.ndarray, c: jnp.ndarray,
                  constant_values=jnp.asarray(1e15, c.dtype))
     gn, gk = xp.shape[0] // tile_n, cp.shape[0] // tile_k
     mask = block_mask.astype(jnp.int32).reshape(gn, gk)
+    if x2 is None:
+        x2 = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+    x2p = jnp.pad(x2.astype(jnp.float32), (0, n_pad))[:, None]
+    if c2 is None:
+        c2p = jnp.sum(cp.astype(jnp.float32) ** 2, axis=-1)
+    else:
+        # pad norms must match the +BIG pad rows so they never win
+        c2p = jnp.pad(c2.astype(jnp.float32), (0, k_pad),
+                      constant_values=jnp.float32(1e30) * d)
+    c2p = c2p[:, None]                                      # (Kp, 1)
 
     best, idx = pl.pallas_call(
         functools.partial(_filtered_assign_kernel, tile_k=tile_k),
@@ -84,7 +101,9 @@ def filtered_assign(x: jnp.ndarray, c: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j: (i, j)),      # mask scalar
             pl.BlockSpec((tile_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i, j: (i, 0)),  # x2 tile
             pl.BlockSpec((tile_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_k, 1), lambda i, j: (j, 0)),  # c2 tile
         ],
         out_specs=[
             pl.BlockSpec((tile_n, 1), lambda i, j: (i, 0)),
@@ -95,5 +114,5 @@ def filtered_assign(x: jnp.ndarray, c: jnp.ndarray,
             jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.int32),
         ],
         interpret=interpret,
-    )(mask, xp, cp)
+    )(mask, xp, x2p, cp, c2p)
     return best[:n, 0], idx[:n, 0]

@@ -32,8 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _grouped_assign_kernel(mask_ref, x_ref, c_ref, ids_ref, best_ref,
-                           idx_ref, gmin_ref, garg_ref, gmin2_ref,
+def _grouped_assign_kernel(mask_ref, x_ref, x2_ref, c_ref, c2_ref, ids_ref,
+                           best_ref, idx_ref, gmin_ref, garg_ref, gmin2_ref,
                            *, lmax: int):
     g = pl.program_id(1)
 
@@ -52,8 +52,10 @@ def _grouped_assign_kernel(mask_ref, x_ref, c_ref, ids_ref, best_ref,
         x = x_ref[...].astype(jnp.float32)                  # (tn, D)
         c = c_ref[0].astype(jnp.float32)                    # (Lmax, D)
         ids = ids_ref[0]                                    # (Lmax,)
-        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
-        c2 = jnp.sum(c * c, axis=-1)[None, :]
+        # squared norms arrive precomputed (once per fit for x2, once
+        # per iteration for c2) — the kernel only does the cross term
+        x2 = x2_ref[...]                                    # (tn, 1)
+        c2 = c2_ref[0][None, :]                             # (1, Lmax)
         cross = jax.lax.dot_general(
             x, c, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -80,13 +82,19 @@ def _grouped_assign_kernel(mask_ref, x_ref, c_ref, ids_ref, best_ref,
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
 def grouped_assign(x: jnp.ndarray, c_grouped: jnp.ndarray,
                    ids: jnp.ndarray, block_mask: jnp.ndarray, *,
-                   tile_n: int = 256, interpret: bool = False):
+                   tile_n: int = 256, interpret: bool = False,
+                   x2: jnp.ndarray | None = None,
+                   c2g: jnp.ndarray | None = None):
     """Group-block-skipping nearest-centroid search with per-group stats.
 
     x: (N, D); c_grouped: (G, Lmax, D) group-bucketed centroids;
     ids: (G, Lmax) int32 original centroid index per slot (-1 = pad);
     block_mask: (ceil(N/tile_n), G) bool/int — True where the group
-    must be scored for that point tile.
+    must be scored for that point tile. ``x2`` (N,) / ``c2g``
+    (G, Lmax): optional precomputed squared norms — the engine caches
+    ``||x||^2`` once per fit and ``||c||^2`` once per iteration and
+    passes them here so the kernel never recomputes them (``None``
+    computes locally; identical results).
 
     Returns ``(best (N,) fp32 sq-dist, idx (N,) int32,
     gmin (N, G) fp32, garg (N, G) int32, gmin2 (N, G) fp32)``; skipped
@@ -99,6 +107,12 @@ def grouped_assign(x: jnp.ndarray, c_grouped: jnp.ndarray,
     xp = jnp.pad(x, ((0, n_pad), (0, 0)))
     gn = xp.shape[0] // tile_n
     mask = block_mask.astype(jnp.int32).reshape(gn, g)
+    if x2 is None:
+        x2 = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+    x2p = jnp.pad(x2.astype(jnp.float32), (0, n_pad))[:, None]  # (Np, 1)
+    if c2g is None:
+        c2g = jnp.sum(c_grouped.astype(jnp.float32) ** 2, axis=-1)
+    c2g = c2g.astype(jnp.float32)                               # (G, Lmax)
 
     best, idx, gmin, garg, gmin2 = pl.pallas_call(
         functools.partial(_grouped_assign_kernel, lmax=lmax),
@@ -106,7 +120,9 @@ def grouped_assign(x: jnp.ndarray, c_grouped: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j: (i, j)),        # mask
             pl.BlockSpec((tile_n, d), lambda i, j: (i, 0)),   # x tile
+            pl.BlockSpec((tile_n, 1), lambda i, j: (i, 0)),   # x2 tile
             pl.BlockSpec((1, lmax, d), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, lmax), lambda i, j: (j, 0)),     # c2
             pl.BlockSpec((1, lmax), lambda i, j: (j, 0)),     # ids
         ],
         out_specs=[
@@ -124,5 +140,6 @@ def grouped_assign(x: jnp.ndarray, c_grouped: jnp.ndarray,
             jax.ShapeDtypeStruct((xp.shape[0], g), jnp.float32),
         ],
         interpret=interpret,
-    )(mask, xp, c_grouped.astype(jnp.float32), ids.astype(jnp.int32))
+    )(mask, xp, x2p, c_grouped.astype(jnp.float32), c2g,
+      ids.astype(jnp.int32))
     return (best[:n, 0], idx[:n, 0], gmin[:n], garg[:n], gmin2[:n])

@@ -65,12 +65,14 @@ from .state import (BoundCache, DriftLedger, ShardBounds, StreamStats,
                     inflate_bounds)
 
 
-@functools.partial(jax.jit, static_argnames=("n_groups", "cap_n"))
+@functools.partial(jax.jit, static_argnames=("n_groups", "cap_n", "chunk",
+                                             "group_gather_factor"))
 def _assign_fresh(points, centroids, groups, members, gsize, *, n_groups,
-                  cap_n):
+                  cap_n, chunk=2048, group_gather_factor=4):
     """Exact nearest-centroid assignment through the engine's candidate
     pass with vacuous bounds (used by predict / inertia_of — keeps even
-    inference on the no-dense-matrix path)."""
+    inference on the no-dense-matrix path, under the same tuned
+    crossover as the fitted passes)."""
     b = points.shape[0]
     a0 = jnp.zeros((b,), jnp.int32)
     ub = jnp.full((b,), jnp.inf, jnp.float32)
@@ -78,7 +80,8 @@ def _assign_fresh(points, centroids, groups, members, gsize, *, n_groups,
     need = jnp.ones((b,), bool)
     nas, nub, _, pairs, _ = compact_candidate_pass(
         points, centroids, a0, ub, lb, groups, members, gsize, need,
-        cap_n=cap_n, cap_g=n_groups, n_groups=n_groups, opt_sq=True)
+        cap_n=cap_n, cap_g=n_groups, n_groups=n_groups, opt_sq=True,
+        chunk=chunk, group_gather_factor=group_gather_factor)
     return nas, nub, pairs
 
 
@@ -101,28 +104,49 @@ class StreamingKMeans:
     drift_reset_factor : drop a cached shard when accumulated group
         drift exceeds this multiple of its stored mean ub (bounds still
         valid, just vacuous — recomputing beats carrying them)
+    tune : 'auto' | 'off' — consult the per-(platform, B, K, D)
+        tuning cache (:mod:`repro.tune`) at cold-start time (B = the
+        first batch's size) and adopt the tuned ``min_cap`` -> bucket
+        floor, ``chunk`` and group-gather crossover for the per-batch
+        candidate passes. Explicitly passed ``min_bucket`` / ``chunk``
+        always win over tuned values. The streaming path never runs
+        the measured search itself ('force' degrades to 'auto' here —
+        tune the batch signature with :func:`repro.tune.autotune` if
+        you want one); results are identical either way.
     """
 
     def __init__(self, n_clusters: int, *, n_groups: int | None = None,
                  init: str = "k-means++", decay: float = 1.0,
                  init_size: int | None = None, seed: int = 0,
-                 min_bucket: int = 256, max_cached_shards: int = 256,
+                 min_bucket: int | None = None,
+                 max_cached_shards: int = 256,
                  reseed_patience: int = 20,
-                 drift_reset_factor: float = 8.0, chunk: int = 2048):
+                 drift_reset_factor: float = 8.0,
+                 chunk: int | None = None,
+                 tune: str = "auto"):
         if init not in ("k-means++", "random"):
             raise ValueError(f"unknown init {init!r}")
         if not 0.0 < decay <= 1.0:
             raise ValueError("decay must be in (0, 1]")
+        if tune not in ("auto", "off", "force"):
+            raise ValueError(f"unknown tune mode {tune!r}; expected "
+                             f"'auto', 'off' or 'force'")
         self.n_clusters = int(n_clusters)
         self.n_groups = n_groups
         self.init = init
         self.decay = float(decay)
         self.init_size = init_size
         self.seed = seed
-        self.min_bucket = int(min_bucket)
+        # None = "use default, tunable"; an explicit value always wins
+        # over the tuned config (same precedence as engine.fit kwargs)
+        self._explicit_min_bucket = min_bucket is not None
+        self._explicit_chunk = chunk is not None
+        self.min_bucket = int(min_bucket) if min_bucket is not None else 256
         self.reseed_patience = int(reseed_patience)
         self.drift_reset_factor = float(drift_reset_factor)
-        self.chunk = int(chunk)
+        self.chunk = int(chunk) if chunk is not None else 2048
+        self.tune = tune
+        self._ggf = 4                     # group-gather crossover factor
 
         self.stats_ = StreamStats()
         self.ewa_inertia_: float | None = None
@@ -173,6 +197,21 @@ class StreamingKMeans:
         self._g = g
         self._members, self._gsize = _engine.build_group_tables(
             self._groups_np, g)
+
+        if self.tune != "off":
+            # adopt the tuned engine configuration for this batch shape
+            # (B = first batch's size): capacity-lattice floor, chunk,
+            # and the group-gather crossover of the per-batch passes.
+            # Explicit constructor arguments keep precedence.
+            from .. import tune as _tune
+            cfg = _tune.lookup(n=self._buffer[0][1].shape[0], k=k,
+                               d=int(buf.shape[1]))
+            if cfg is not None:
+                if not self._explicit_min_bucket:
+                    self.min_bucket = int(cfg.min_cap)
+                if not self._explicit_chunk:
+                    self.chunk = int(cfg.chunk)
+                self._ggf = int(cfg.group_gather_factor)
         self._centroids = init_c
         self._counts = jnp.zeros((k,), jnp.float32)
         self._ledger = DriftLedger(k, g)
@@ -252,7 +291,7 @@ class StreamingKMeans:
             pts, self._centroids, self._counts, jnp.float32(self.decay),
             self._groups, self._members, self._gsize, assign, ub_t, lb_d,
             need, k=self.n_clusters, n_groups=g, cap_n=cap_n, cap_g=cap_g,
-            chunk=self.chunk)
+            chunk=self.chunk, group_gather_factor=self._ggf)
         self._centroids, self._counts = out.centroids, out.counts
 
         (nas_np, ub_np, lb_np, pairs, gmax, drift_np, gdrift_np,
@@ -391,7 +430,8 @@ class StreamingKMeans:
         pts = jnp.asarray(np.asarray(points, np.float32))
         nas, _, _ = _assign_fresh(
             pts, self._centroids, self._groups, self._members, self._gsize,
-            n_groups=self._g, cap_n=pts.shape[0])
+            n_groups=self._g, cap_n=pts.shape[0], chunk=self.chunk,
+            group_gather_factor=self._ggf)
         return np.asarray(jax.device_get(nas))
 
     def inertia_of(self, points) -> float:
@@ -401,5 +441,6 @@ class StreamingKMeans:
         pts = jnp.asarray(np.asarray(points, np.float32))
         _, nub, _ = _assign_fresh(
             pts, self._centroids, self._groups, self._members, self._gsize,
-            n_groups=self._g, cap_n=pts.shape[0])
+            n_groups=self._g, cap_n=pts.shape[0], chunk=self.chunk,
+            group_gather_factor=self._ggf)
         return float(jnp.sum(nub * nub))

@@ -1,0 +1,40 @@
+"""Per-(platform, N, K, D) autotuning for the K-means engine.
+
+The engine's fixed heuristics (``tile_n``, ``min_cap``, the
+group-gather crossover, the capacity-downshift hysteresis, the
+Lloyd-vs-filter backend choice) are measured choices whose right
+values depend on the problem signature. This package searches that
+configuration space (:func:`autotune` — a backend grid + coordinate
+hill-climb, see :mod:`repro.tune.search`), persists winners to a disk
+cache (:class:`TuneCache`, ``~/.cache/repro_kmeans_tune.json`` or
+``$REPRO_KMEANS_TUNE_CACHE``), and answers lookups from
+``engine.fit(tune=...)`` / ``KMeans(tune=...)`` /
+``StreamingKMeans(tune=...)``.
+
+Tuning is pure wall-clock: every configuration produces bit-identical
+assignments and inertia (asserted by ``tests/test_tune.py``), so a
+stale or foreign cache can never corrupt results.
+"""
+from __future__ import annotations
+
+from ..core.engine import DEFAULT_CONFIG, EngineConfig
+from .cache import (ENV_VAR, TuneCache, default_cache, default_path,
+                    set_default_cache)
+from .search import autotune, get_or_tune, timing_measure
+from .signature import pow2_bucket, signature
+
+__all__ = [
+    "EngineConfig", "DEFAULT_CONFIG", "TuneCache", "default_cache",
+    "default_path", "set_default_cache", "autotune", "get_or_tune",
+    "timing_measure", "signature", "pow2_bucket", "lookup", "ENV_VAR",
+]
+
+
+def lookup(*, n: int, k: int, d: int, platform: str | None = None,
+           cache: TuneCache | None = None) -> EngineConfig | None:
+    """Tuned config for a problem signature, or None on a cache miss.
+    This is the (cheap, in-memory after first disk read) call on
+    ``engine.fit``'s hot path when ``tune != "off"``."""
+    if cache is None:
+        cache = default_cache()
+    return cache.lookup(signature(n, k, d, platform))

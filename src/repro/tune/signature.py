@@ -1,0 +1,25 @@
+"""Problem signatures: the autotuner's cache key.
+
+A tuned :class:`~repro.core.engine.EngineConfig` is only transferable
+between problems that stress the engine the same way, which KPynq's
+cost model says is (platform, N, K, D): the platform picks the
+backend/realisation, N the capacity lattice, K the candidate-pass GEMM
+minor dim, D the arithmetic intensity of every distance. N is bucketed
+to its power-of-two ceiling — the engine's own capacity lattice is
+pow2, so two problems in the same bucket compile the same programs.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def signature(n: int, k: int, d: int, platform: str | None = None) -> str:
+    """Cache key for a (platform, N, K, D) problem class."""
+    if platform is None:
+        platform = jax.default_backend()
+    return f"{platform}|n{pow2_bucket(n)}|k{int(k)}|d{int(d)}"

@@ -1,0 +1,20 @@
+"""Shared test fixtures.
+
+Every test runs against an isolated, empty tuning cache: the engine's
+default ``tune="auto"`` consults ``~/.cache/repro_kmeans_tune.json``
+(or ``$REPRO_KMEANS_TUNE_CACHE``), and letting developer-machine /
+benchmark-produced entries leak into tests would make backend-routing
+assertions depend on ``$HOME`` state. Results can never change (tuning
+is wall-clock-only), but routing/stats assertions can.
+"""
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tune_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_KMEANS_TUNE_CACHE",
+                       str(tmp_path / "tune_cache.json"))
+    import repro.tune as tune
+    tune.set_default_cache(None)     # re-resolve under the tmp env var
+    yield
+    tune.set_default_cache(None)     # drop the tmp-backed singleton

@@ -1,0 +1,321 @@
+"""Autotuner invariants: tuning changes wall-clock, never results.
+
+Covers the ISSUE 3 contract: (1) the disk cache round-trips configs by
+problem signature, (2) the search is deterministic under a fixed
+measurement function, (3) tuned and default configurations produce
+bit-identical assignments/inertia across the engine test matrix,
+(4) ``||x||^2`` is computed exactly once per fit (the norm-carry
+refactor), (5) the compact pass's gather-vs-GEMM decision follows the
+tuned crossover and is exposed in EngineStats.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.core import EngineConfig, KMeans, kmeans_plusplus, lloyd
+from repro.core import engine
+from repro.data import make_points
+
+
+@pytest.fixture
+def tmp_cache(tmp_path):
+    """Fresh TuneCache in tmp, installed as the process default for the
+    duration of the test (fit(tune=...) consults the default)."""
+    cache = tune.TuneCache(str(tmp_path / "tune.json"))
+    old = tune.set_default_cache(cache)
+    assert old is cache
+    yield cache
+    tune.set_default_cache(None)
+
+
+def _dataset(n, d, k, seed=0):
+    pts, _, _ = make_points(n, d, k, seed=seed)
+    pts = jnp.asarray(pts)
+    init = kmeans_plusplus(jax.random.PRNGKey(seed + 1), pts, k)
+    return pts, init
+
+
+# -- cache ------------------------------------------------------------------
+
+def test_cache_round_trip(tmp_path):
+    path = str(tmp_path / "t.json")
+    cache = tune.TuneCache(path)
+    sig = tune.signature(3000, 32, 16, platform="cpu")
+    cfg = EngineConfig(backend="compact", min_cap=512, down_g=0,
+                       refresh_in_pass=True)
+    cache.store(sig, cfg, ms=4.2)
+
+    # reload from disk through a NEW instance
+    cache2 = tune.TuneCache(path)
+    got = cache2.lookup(sig)
+    assert got == cfg
+    assert cache2.entry(sig)["ms"] == 4.2
+    # same pow2 N bucket -> same signature -> hit
+    assert tune.signature(2500, 32, 16, platform="cpu") == sig
+    # different K, D, N bucket or platform -> miss
+    assert cache2.lookup(tune.signature(3000, 64, 16, "cpu")) is None
+    assert cache2.lookup(tune.signature(3000, 32, 8, "cpu")) is None
+    assert cache2.lookup(tune.signature(9000, 32, 16, "cpu")) is None
+    assert cache2.lookup(tune.signature(3000, 32, 16, "tpu")) is None
+
+    cache2.drop(sig)
+    assert cache2.lookup(sig) is None
+    assert tune.TuneCache(path).lookup(sig) is None   # drop persisted
+
+
+def test_cache_tolerates_corrupt_file(tmp_path):
+    path = str(tmp_path / "t.json")
+    with open(path, "w") as fh:
+        fh.write("{not json")
+    cache = tune.TuneCache(path)
+    assert cache.lookup("anything") is None
+    cache.store("sig", EngineConfig())          # and can still write
+    assert tune.TuneCache(path).lookup("sig") == EngineConfig()
+
+
+def test_config_dict_round_trip_tolerates_unknown_keys():
+    cfg = EngineConfig(backend="compact", chunk=1024)
+    d = cfg.to_dict()
+    d["knob_from_the_future"] = 7
+    assert EngineConfig.from_dict(d) == cfg
+
+
+def test_env_var_overrides_default_path(tmp_path, monkeypatch):
+    monkeypatch.setenv(tune.ENV_VAR, str(tmp_path / "custom.json"))
+    assert tune.TuneCache().path == str(tmp_path / "custom.json")
+
+
+# -- search -----------------------------------------------------------------
+
+def _stub_measure(costs):
+    """Deterministic measurement stub: cost surface keyed on knobs."""
+    calls = []
+
+    def measure(cfg):
+        calls.append(cfg)
+        return costs(cfg)
+    measure.calls = calls
+    return measure
+
+
+def test_search_is_deterministic_and_finds_stub_optimum(tmp_path):
+    def costs(cfg):
+        if cfg.backend == "lloyd":
+            return 5.0
+        # optimum: compact, min_cap=512, down_g=0, refresh_in_pass=True
+        return (3.0 + abs(cfg.min_cap - 512) / 1000.0
+                + (0.5 if cfg.down_g else 0.0)
+                + (0.0 if cfg.refresh_in_pass else 0.25))
+
+    pts, init = _dataset(3000, 16, 32)
+    cache = tune.TuneCache(str(tmp_path / "a.json"))
+    m1 = _stub_measure(costs)
+    best1 = tune.autotune(pts, init, cache=cache, measure=m1)
+    assert best1.backend == "compact"
+    assert best1.min_cap == 512
+    assert best1.down_g == 0
+    assert best1.refresh_in_pass is True
+
+    m2 = _stub_measure(costs)
+    best2 = tune.autotune(pts, init,
+                          cache=tune.TuneCache(str(tmp_path / "b.json")),
+                          measure=m2)
+    assert best1 == best2
+    assert [c.to_dict() for c in m1.calls] == \
+        [c.to_dict() for c in m2.calls]
+
+    # the search persisted its winner under the problem's signature
+    sig = tune.signature(3000, 32, 16)
+    assert cache.lookup(sig) == best1
+    assert cache.entry(sig)["lloyd_ms"] == pytest.approx(5000.0)
+
+
+def test_search_backend_grid_can_pick_lloyd(tmp_path):
+    pts, init = _dataset(1000, 8, 8)
+    best = tune.autotune(
+        pts, init, cache=tune.TuneCache(str(tmp_path / "c.json")),
+        measure=_stub_measure(
+            lambda cfg: 1.0 if cfg.backend == "lloyd" else 9.0))
+    assert best.backend == "lloyd"
+
+
+def test_get_or_tune_prefers_cache_hit(tmp_path):
+    pts, init = _dataset(1000, 8, 8)
+    cache = tune.TuneCache(str(tmp_path / "d.json"))
+    pinned = EngineConfig(backend="compact", chunk=4096)
+    cache.store(tune.signature(1000, 8, 8), pinned)
+    m = _stub_measure(lambda cfg: 1.0)
+    got = tune.get_or_tune(pts, init, cache=cache, measure=m)
+    assert got == pinned
+    assert m.calls == []                       # no measurement happened
+
+
+# -- fit integration: tuning never changes results --------------------------
+
+TUNED_VARIANTS = [
+    EngineConfig(backend="compact", min_cap=128, chunk=1024,
+                 group_gather_factor=2, down_n=4, down_g=2),
+    EngineConfig(backend="compact", min_cap=512, down_n=0, down_g=0,
+                 refresh_in_pass=True),
+]
+
+
+@pytest.mark.parametrize("n,d,k,g", [
+    (1000, 8, 12, 3),     # N % tile_n != 0, K < tile_k
+    (513, 5, 7, 2),       # ragged everything
+    (768, 4, 8, 1),       # single group = Hamerly point-level filter
+    (2048, 12, 16, 16),   # one group per centroid
+])
+def test_tuned_configs_bit_identical_on_engine_matrix(n, d, k, g):
+    pts, init = _dataset(n, d, k)
+    base = engine.fit(pts, init, n_groups=g, max_iters=50, tol=1e-5,
+                      backend="compact", min_cap=64, tune="off")
+    r_l = lloyd(pts, init, max_iters=50, tol=1e-5)
+    for cfg in TUNED_VARIANTS:
+        r = engine.fit(pts, init, n_groups=g, max_iters=50, tol=1e-5,
+                       config=cfg, tune="off")
+        np.testing.assert_array_equal(np.asarray(r.assignments),
+                                      np.asarray(base.assignments))
+        assert float(r.inertia) == float(base.inertia)
+        assert int(r.n_iters) == int(base.n_iters)
+        # and both sit on Lloyd's fixed point
+        np.testing.assert_array_equal(np.asarray(r.assignments),
+                                      np.asarray(r_l.assignments))
+
+
+def test_fit_tune_auto_consults_default_cache(tmp_cache):
+    pts, init = _dataset(4200, 8, 48)          # big enough to skip lloyd
+    marker = EngineConfig(backend="compact", min_cap=128, down_n=0,
+                          down_g=0)
+    tmp_cache.store(tune.signature(4200, 48, 8), marker)
+    r_t, st = engine.fit(pts, init, max_iters=30, tune="auto",
+                         return_stats=True)
+    assert st.config == marker.to_dict()
+    r_off = engine.fit(pts, init, max_iters=30, tune="off")
+    np.testing.assert_array_equal(np.asarray(r_t.assignments),
+                                  np.asarray(r_off.assignments))
+    assert float(r_t.inertia) == float(r_off.inertia)
+
+
+def test_fit_tune_force_uses_cache_hit_without_search(tmp_cache):
+    pts, init = _dataset(900, 6, 9)
+    pinned = EngineConfig(backend="lloyd")
+    tmp_cache.store(tune.signature(900, 9, 6), pinned)
+    r, st = engine.fit(pts, init, max_iters=20, tune="force",
+                       return_stats=True)
+    assert st.backend == "lloyd"               # the pinned choice ran
+    r_ref = lloyd(pts, init, max_iters=20)
+    np.testing.assert_array_equal(np.asarray(r.assignments),
+                                  np.asarray(r_ref.assignments))
+
+
+def test_explicit_kwargs_override_tuned_config(tmp_cache):
+    pts, init = _dataset(4200, 8, 48)
+    tmp_cache.store(tune.signature(4200, 48, 8),
+                    EngineConfig(backend="compact", min_cap=1024))
+    _, st = engine.fit(pts, init, max_iters=10, tune="auto", min_cap=64,
+                       backend="compact", return_stats=True)
+    assert st.config["min_cap"] == 64
+
+
+def test_kmeans_api_tune_validation_and_passthrough(tmp_cache):
+    with pytest.raises(ValueError):
+        KMeans(n_clusters=4, tune="sometimes")
+    pts, _ = _dataset(1500, 8, 8)
+    km = KMeans(n_clusters=8, engine="compact", seed=1, tune="off").fit(pts)
+    km2 = KMeans(n_clusters=8, engine="compact", seed=1,
+                 tune="auto").fit(pts)
+    np.testing.assert_array_equal(km.labels_, km2.labels_)
+
+
+def test_streaming_adopts_tuned_config(tmp_cache):
+    b, d, k = 512, 16, 16
+    tmp_cache.store(
+        tune.signature(b, k, d),
+        EngineConfig(backend="compact", min_cap=128, chunk=4096,
+                     group_gather_factor=8))
+    from repro.streaming import StreamingKMeans
+    sk = StreamingKMeans(k, seed=0, tune="auto")
+    sk_off = StreamingKMeans(k, seed=0, tune="off")
+    for i in range(4):
+        batch = np.asarray(make_points(b, d, k, seed=i)[0])
+        sk.partial_fit(batch, shard_id=i)
+        sk_off.partial_fit(batch, shard_id=i)
+    assert sk.min_bucket == 128 and sk.chunk == 4096 and sk._ggf == 8
+    assert sk_off.min_bucket == 256 and sk_off.chunk == 2048
+    # tuning never changes the stream state
+    np.testing.assert_allclose(sk.cluster_centers_,
+                               sk_off.cluster_centers_)
+
+    # explicitly passed knobs keep precedence over the tuned entry
+    # (only the non-conflicting crossover factor is adopted)
+    sk_exp = StreamingKMeans(k, seed=0, tune="auto", min_bucket=512,
+                             chunk=1024)
+    sk_exp.partial_fit(np.asarray(make_points(b, d, k, seed=0)[0]),
+                       shard_id=0)
+    assert sk_exp.min_bucket == 512 and sk_exp.chunk == 1024
+    assert sk_exp._ggf == 8
+
+
+# -- norm-carry contract ----------------------------------------------------
+
+def test_x2_computed_exactly_once_per_fit(tmp_cache, monkeypatch):
+    """The ISSUE 3 norm-carry contract: ||x||^2 over the full point set
+    is evaluated exactly once per fit (at _init_carry), then carried
+    through the while_loop — no per-iteration recomputation anywhere
+    in the engine's traces."""
+    n, d, k = 5003, 11, 40                      # fresh shape => fresh trace
+    pts, init = _dataset(n, d, k)
+    real = engine.row_norms_sq
+    full_n_calls = []
+
+    def counting(x):
+        if x.ndim == 1 or x.shape[0] == n:
+            full_n_calls.append(x.shape)
+        return real(x)
+
+    monkeypatch.setattr(engine, "row_norms_sq", counting)
+    r, st = engine.fit(pts, init, max_iters=30, tol=1e-5,
+                       backend="compact", tune="off", return_stats=True)
+    full_point_norms = [s for s in full_n_calls if s == (n, d)]
+    assert len(full_point_norms) == 1, full_n_calls
+    assert st.n_iters > 2                       # it really iterated
+    assert st.x2_evals == 1
+
+
+# -- the tuned gather-vs-GEMM crossover -------------------------------------
+
+def test_use_groups_decision_follows_tuned_crossover(tmp_cache):
+    # k=24 in g=8 groups: l_max ~ 3, so a cap_g=4 bucket gives
+    # 4*3*factor vs k=24 -> factor 2 qualifies, factor 8 does not
+    assert engine.use_groups_decision(cap_n=512, cap_g=4, l_max=3, k=24,
+                                      chunk=2048, group_gather_factor=2)
+    assert not engine.use_groups_decision(cap_n=512, cap_g=4, l_max=3,
+                                          k=24, chunk=2048,
+                                          group_gather_factor=8)
+    # and the cap_n <= chunk guard still applies
+    assert not engine.use_groups_decision(cap_n=4096, cap_g=4, l_max=3,
+                                          k=24, chunk=2048,
+                                          group_gather_factor=2)
+
+    pts, init = _dataset(6000, 8, 24)
+    results = {}
+    for ggf in (2, 8):
+        cfg = EngineConfig(backend="compact", group_gather_factor=ggf)
+        r, st = engine.fit(pts, init, n_groups=8, max_iters=40, tol=1e-5,
+                           config=cfg, tune="off", return_stats=True)
+        assert len(st.use_groups) == len(st.caps_history)
+        results[ggf] = (r, st)
+    # the big factor must never take the gather path; the small one
+    # must have taken it at least once on this shape
+    assert not any(results[8][1].use_groups)
+    assert any(results[2][1].use_groups)
+    # ...and the decision changed only the path, not the answer
+    np.testing.assert_array_equal(
+        np.asarray(results[2][0].assignments),
+        np.asarray(results[8][0].assignments))
+    assert float(results[2][0].inertia) == float(results[8][0].inertia)
