@@ -122,15 +122,16 @@ def summarize(rows):
 def write_json(rows, path="BENCH_kmeans.json", scale=1.0):
     """Machine-readable perf record so the trajectory is tracked
     across PRs (consumed by CI via ``benchmarks/run.py --check`` and by
-    later sessions). Preserves the ``streaming`` section owned by
-    ``streaming_bench.py``. ``scale`` is recorded so the --check gate
-    can re-measure at the SAME problem sizes (speedups at different n
-    are incommensurable: tiny problems auto-route to Lloyd)."""
+    later sessions). Preserves the ``streaming`` / ``distributed``
+    sections owned by ``streaming_bench.py`` / ``distributed_bench.py``.
+    ``scale`` is recorded so the --check gate can re-measure at the
+    SAME problem sizes (speedups at different n are incommensurable:
+    tiny problems auto-route to Lloyd)."""
     payload = {}
     try:
         with open(path) as fh:
             payload = {k: v for k, v in json.load(fh).items()
-                       if k == "streaming"}
+                       if k in ("streaming", "distributed")}
     except (FileNotFoundError, ValueError):
         pass
     payload["scale"] = scale

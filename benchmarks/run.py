@@ -7,8 +7,11 @@
 Prints ``name,us_per_call,derived`` CSV per line, and writes the
 K-means perf record to ``BENCH_kmeans.json`` (per-dataset ``lloyd_ms``,
 ``engine_ms``, ``speedup``, ``work_reduction``, winning ``tuned``
-config + suite means, plus the ``streaming`` subsystem record) so the
-perf trajectory is tracked across PRs.
+config + suite means, plus the ``streaming`` and ``distributed``
+subsystem records — the latter measured in a
+``benchmarks.distributed_bench`` subprocess so the forced multi-device
+CPU runtime can initialise) so the perf trajectory is tracked across
+PRs.
 
 ``--tune`` refreshes the engine's per-(platform, N, K, D) tuning cache
 (``benchmarks/autotune.py`` -> :mod:`repro.tune`) for the suite's
@@ -27,9 +30,15 @@ tuned configurations.
   wall-clock contract of ISSUE 3 (the engine's work-efficiency must
   not cost wall-clock);
 * requires the streaming fit's inertia gap to stay within 5% of the
-  batch engine.
+  batch engine;
+* requires the committed ``distributed`` record (when present) to keep
+  compact/dense parity and a per-shard work reduction > 1.0.
 
-Exit code 1 on regression — CI-invocable.
+Exit codes are per-gate so CI logs say which tripped: 0 = all OK,
+1 = wall-clock / mean-speedup / distributed regression (the per-dataset
+table above the summary names the row), **3 = ONLY the streaming
+inertia gap regressed** (speedups all healthy — a subsystem-specific
+failure, not an engine regression), 2 = no committed record.
 """
 import argparse
 import sys
@@ -63,6 +72,19 @@ def check(args) -> None:
               f"{ratio:.3f} (limit 1.05 + 0.25ms) -> "
               f"{'OK' if ok else 'REGRESSION'}")
 
+    # committed distributed record: parity is structural and the
+    # work reduction is the tentpole claim — both deterministic
+    dist_ok = True
+    drow = committed.get("distributed")
+    if drow:
+        dist_ok = drow.get("assignments_match", False) and \
+            drow.get("work_reduction", 0.0) > 1.0
+        print(f"check: committed distributed: parity="
+              f"{'OK' if drow.get('assignments_match') else 'FAIL'} "
+              f"work_reduction={drow.get('work_reduction', 0.0):.2f}x "
+              f"(must be > 1.0) -> "
+              f"{'OK' if dist_ok else 'REGRESSION'}")
+
     scale = committed.get("scale", 0.1)
     if args.tune:
         from . import autotune
@@ -72,6 +94,13 @@ def check(args) -> None:
     # problem sizes are incommensurable (tiny fits auto-route to Lloyd)
     rows = kmeans_speedup.run(scale=scale)
     fresh = kmeans_speedup.summarize(rows)["mean_speedup"]
+    committed_rows = {r["dataset"]: r for r in committed.get("datasets", [])}
+    print("check: dataset            fresh   committed")
+    for r in rows:
+        ref_row = committed_rows.get(r["dataset"], {})
+        print(f"check:   {r['dataset']:<16} "
+              f"{r['speedup']:7.3f}x  "
+              f"{ref_row.get('speedup', float('nan')):7.3f}x")
     ref = committed["mean_speedup"]
     floor = ref * args.check_tolerance
     speed_ok = fresh >= floor
@@ -83,7 +112,22 @@ def check(args) -> None:
     gap_ok = srow["inertia_gap"] <= 0.05
     print(f"check: streaming inertia_gap={srow['inertia_gap'] * 100:+.2f}% "
           f"(limit +5%) -> {'OK' if gap_ok else 'REGRESSION'}")
-    sys.exit(0 if wall_ok and speed_ok and gap_ok else 1)
+
+    engine_ok = wall_ok and speed_ok and dist_ok
+    if engine_ok and gap_ok:
+        sys.exit(0)
+    if engine_ok and not gap_ok:
+        # distinct code: ONLY the streaming subsystem tripped — the
+        # engine gates above are all healthy, so CI can label the
+        # failure precisely instead of reading it as a perf regression
+        print("check: FAILED gate: streaming inertia gap (exit 3)")
+        sys.exit(3)
+    tripped = [name for name, ok in (("wall-clock", wall_ok),
+                                     ("mean_speedup", speed_ok),
+                                     ("distributed", dist_ok),
+                                     ("streaming-gap", gap_ok)) if not ok]
+    print(f"check: FAILED gate(s): {', '.join(tripped)} (exit 1)")
+    sys.exit(1)
 
 
 def main() -> None:
@@ -125,6 +169,19 @@ def main() -> None:
     kmeans_speedup.main(scale=scale, json_path=args.json or None)
     print("# === streaming / mini-batch subsystem ===", flush=True)
     streaming_bench.main(scale=scale, json_path=args.json or None)
+    print("# === distributed engine (forced multi-device CPU) ===",
+          flush=True)
+    # subprocess: the forced device count must be set before jax
+    # initialises, which is long done in THIS process
+    import os
+    import subprocess
+    cmd = [sys.executable, "-m", "benchmarks.distributed_bench",
+           "--scale", str(scale)] + \
+        (["--out", args.json] if args.json else ["--out", ""])
+    r = subprocess.run(cmd, env=dict(os.environ))
+    if r.returncode:
+        print(f"# distributed_bench failed (exit {r.returncode})",
+              flush=True)
     print("# === filter efficiency (multi-level filter rates) ===",
           flush=True)
     filter_efficiency.main()

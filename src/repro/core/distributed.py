@@ -3,19 +3,50 @@
 Points are sharded along one (or a flattened set of) mesh axes; bounds
 (ub/lb) and assignments live with their shard; centroids are replicated.
 Each iteration the only communication is a psum of the (K, D) partial
-sums + (K,) counts + scalar drift — exactly the FPGA design's
-"stream points through, accumulate centroids centrally" pattern mapped
-onto ICI collectives. Filtering is per-shard local, so the work saving
-composes with parallelism.
+sums + (K,) counts — exactly the FPGA design's "stream points through,
+accumulate centroids centrally" pattern mapped onto ICI collectives
+(and the simplified map-reduce framing of Li et al.: map = per-shard
+assignment, reduce = the centroid psum). Filtering is per-shard local,
+so the work saving composes with parallelism.
 
-The per-shard iteration is the ENGINE's step (``engine.move_and_bounds``
-with a psum reduction hook + ``engine.dense_candidate_pass``) — one
-implementation of the filter math shared by the local and distributed
-paths, so exactness fixes land in both at once.
+Two per-shard realisations of the candidate pass:
 
-Optional int8 error-feedback compression of the psum payload
-(``compress=True``) implements the gradient-compression analogue for the
-centroid partial sums.
+``backend="compact"`` (default, :func:`make_fit_sharded_engine`)
+    The engine's capacity-bucketed two-level compaction, run INSIDE the
+    ``shard_map`` body: each shard carries its own bucket level through
+    the ``lax.while_loop`` and switches levels shard-locally over a
+    static capacity ladder (``engine.cap_ladders`` /
+    ``engine.ladder_candidate_pass``) with the tuned downshift
+    hysteresis — no host syncs anywhere in the sharded loop. The
+    convergence test rides on the psum'd centroid sums (every shard
+    sees the same drift, so the while conds agree), and the
+    ``EvalCount`` work counter is psum'd at the end.
+``backend="dense"`` (:func:`make_fit_sharded`)
+    The legacy masked-dense pass over every shard point (exact, no
+    skipped FLOPs) — the oracle the compact path is tested against,
+    and the AOT-lowering target of the production-mesh dry-run.
+
+The per-shard iteration is built from the ENGINE's pieces
+(``engine.move_and_bounds`` with a psum reduction hook +
+``engine.ladder_candidate_pass`` / ``engine.dense_candidate_pass``) —
+one implementation of the filter math shared by the local and
+distributed paths, so exactness fixes land in both at once.
+
+Optional int8 compression of the psum payload (``compress=True``)
+applies to the (K, D) partial-sums tensor only (counts and scalars stay
+exact) — the gradient-compression analogue for the centroid sums.
+
+Uneven shard sizes are handled by padding to the shard lattice with
+sentinel rows (``assignment = K``, ``ub = 0``, ``lb = +inf``): the
+sentinel drops out of every ``segment_sum`` and the zero/inf bounds
+keep padded rows filtered forever, so they cost no candidate work and
+touch no statistics.
+
+:func:`make_stream_bounds_sharded` / :func:`make_stream_update_sharded`
+are the sharded analogues of ``engine.stream_bounds`` /
+``engine.stream_update`` — one global mini-batch split over the mesh,
+candidate pass per shard, psum'd batch sums/counts feeding the decayed
+EMA — driven by ``repro.streaming.StreamingKMeans(mesh=...)``.
 """
 from __future__ import annotations
 
@@ -24,6 +55,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # shard_map moved out of jax.experimental (and check_rep was renamed
@@ -39,9 +71,13 @@ except ImportError:                      # jax >= 0.7
     _SHARD_MAP_KW = {"check_vma": False}
 
 from .distances import row_norms_sq, rowwise_dists
-from .engine import dense_candidate_pass, move_and_bounds
+from .engine import (DEFAULT_CONFIG, EngineCarry, EngineConfig,
+                     StreamStepOut, build_group_tables, cap_ladders,
+                     compact_candidate_pass, dense_candidate_pass,
+                     ladder_candidate_pass, move_and_bounds, select_bucket,
+                     stream_bounds, stream_ema_and_decay, _init_carry)
 from .kmeans import (FilterState, KMeansResult, _init_filter_state,
-                     group_centroids)
+                     centroid_sums, group_centroids)
 
 
 def _psum_maybe_compressed(x: jnp.ndarray, axes, compress: bool):
@@ -132,25 +168,338 @@ def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
     return fit_sharded
 
 
+def make_fit_sharded_engine(mesh: Mesh, axes, k: int, n_groups: int,
+                            max_iters: int, tol: float, *, shard_n: int,
+                            compress: bool = False,
+                            config: EngineConfig | None = None,
+                            max_branches: int = 12):
+    """Build the compact (capacity-bucketed) sharded fit.
+
+    Returns a shard_map'd ``fit(local_points, valid, init_c, groups,
+    members, gsize) -> (centroids, assignments, n_iters, evals,
+    inertia)`` where ``valid`` masks sentinel padding rows (see module
+    docstring), ``groups`` is the (K,) centroid->group map and
+    ``members``/``gsize`` the host-built group tables
+    (``engine.build_group_tables`` — built OUTSIDE the sharded program,
+    so the per-point group buckets use the true ``Lmax``, not the K
+    upper bound).
+
+    The body is the engine's split-loop construction (pending candidate
+    pass at the top of each iteration, one epilogue pass after the
+    loop) with the bucket machinery fully in-trace: each shard carries
+    ``(level_n, level_g)`` through the while_loop, runs
+    ``ladder_candidate_pass`` at its level, and transitions via
+    ``select_bucket`` using its OWN candidate count / group high-water
+    — per-shard work-proportional capacities with zero host round
+    trips. ``cfg.min_cap`` floors the ladder; ``cfg.down_n``/``down_g``
+    set the downshift hysteresis; ``cfg.chunk`` and
+    ``cfg.group_gather_factor`` pick each branch's gather-vs-GEMM
+    crossover; ``cfg.refresh_in_pass`` places the own-distance refresh
+    (full-shard rowwise vs on the compacted survivor buffer).
+    """
+    axes = tuple(axes)
+    cfg = config or DEFAULT_CONFIG
+    cap_ns, cap_gs = cap_ladders(shard_n, n_groups, min_cap=cfg.min_cap,
+                                 max_branches=max_branches)
+    pspec = P(axes, None)
+
+    def reduce_sums(sums, counts):
+        return (_psum_maybe_compressed(sums, axes, compress),
+                jax.lax.psum(counts, axes))
+
+    refresh = not cfg.refresh_in_pass
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(pspec, P(axes), P(None, None), P(None), P(None, None),
+                  P(None)),
+        out_specs=(P(None, None), P(axes), P(), P(), P()),
+        **_SHARD_MAP_KW,
+    )
+    def fit_sharded(local_points, valid, init_c, groups, members, gsize):
+        carry0 = _init_carry(local_points, init_c, groups,
+                             n_groups=n_groups)
+        # sentinel-mask the padding rows: assignment K drops out of
+        # every segment_sum; ub=0 / lb=inf keeps them filtered forever.
+        # Their K initial distance rows never ran semantically — take
+        # them back out of the eval count.
+        pad = jnp.sum(1.0 - valid.astype(jnp.float32))
+        carry0 = carry0._replace(
+            assignments=jnp.where(valid, carry0.assignments, k),
+            ub=jnp.where(valid, carry0.ub, 0.0),
+            lb=jnp.where(valid[:, None], carry0.lb, jnp.inf),
+            evals=carry0.evals.add(-pad * k))
+
+        def candidate(carry, ln, lg):
+            return ladder_candidate_pass(
+                local_points, carry.centroids, carry.assignments,
+                carry.ub, carry.lb, groups, members, gsize, carry.need,
+                ln, lg, cap_ns=cap_ns, cap_gs=cap_gs, n_groups=n_groups,
+                chunk=cfg.chunk,
+                group_gather_factor=cfg.group_gather_factor,
+                x2=carry.x2, c2=carry.c2,
+                refresh_ub=cfg.refresh_in_pass)
+
+        def cond(state):
+            carry, _, _ = state
+            # the centroid sums are psum'd, so shift is replicated:
+            # every shard's cond agrees and the collectives stay in
+            # lockstep even when shards sit in different buckets
+            return jnp.logical_and(carry.iteration < max_iters,
+                                   carry.shift > tol)
+
+        def body(state):
+            carry, ln, lg = state
+            new_as, new_ub, new_lb, pairs, gmax = candidate(carry, ln, lg)
+            new_c, new_c2, ub_t, lb_dec, need, shift, tightened = \
+                move_and_bounds(local_points, carry.centroids, new_as,
+                                new_ub, new_lb, groups, k=k,
+                                n_groups=n_groups,
+                                reduce_sums=reduce_sums, x2=carry.x2,
+                                refresh=refresh)
+            n_cand = jnp.sum(need.astype(jnp.int32))
+            carry = EngineCarry(carry.iteration + 1, new_c, new_c2,
+                                new_as, ub_t, lb_dec, carry.x2, need,
+                                n_cand, gmax, shift,
+                                carry.evals.add(pairs).add(tightened))
+            ln, lg = select_bucket(n_cand, gmax, ln, lg, cap_ns=cap_ns,
+                                   cap_gs=cap_gs, down_n=cfg.down_n,
+                                   down_g=cfg.down_g)
+            return carry, ln, lg
+
+        state0 = (carry0, jnp.int32(0), jnp.int32(0))
+        carry, ln, lg = jax.lax.while_loop(cond, body, state0)
+
+        # epilogue: the final pending candidate pass + masked inertia
+        new_as, _, _, pairs, _ = candidate(carry, ln, lg)
+        evals = carry.evals.add(pairs)
+        own = carry.centroids[jnp.minimum(new_as, k - 1)]
+        d = rowwise_dists(local_points, own)
+        inertia = jax.lax.psum(
+            jnp.sum(jnp.where(valid, d * d, 0.0)), axes)
+        total = jax.lax.psum(evals.total(), axes)
+        return (carry.centroids, new_as, carry.iteration, total, inertia)
+
+    return fit_sharded
+
+
+def _mesh_shards(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64))
+
+
+# Builder memos: a fresh shard_map closure is a fresh jit cache key, so
+# without these every distributed_yinyang call would re-trace AND
+# re-compile the whole sharded program (the compact ladder compiles one
+# pass instance per bucket level — seconds of XLA time on CPU).
+@functools.lru_cache(maxsize=64)
+def _jitted_fit_dense(mesh: Mesh, axes, k, n_groups, max_iters, tol,
+                      compress):
+    return jax.jit(make_fit_sharded(mesh, axes, k, n_groups, max_iters,
+                                    tol, compress))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_fit_engine(mesh: Mesh, axes, k, n_groups, max_iters, tol,
+                       shard_n, compress, config, max_branches):
+    return jax.jit(make_fit_sharded_engine(
+        mesh, axes, k, n_groups, max_iters, tol, shard_n=shard_n,
+        compress=compress, config=config, max_branches=max_branches))
+
+
+def _pad_sharded(arr_np: np.ndarray, shards: int):
+    """Pad (N, ...) to a multiple of ``shards`` rows; returns
+    ``(padded, valid bool mask)``."""
+    n = len(arr_np)
+    n_pad = (-n) % shards
+    valid = np.arange(n + n_pad) < n
+    if n_pad:
+        pad = np.zeros((n_pad,) + arr_np.shape[1:], arr_np.dtype)
+        arr_np = np.concatenate([arr_np, pad], axis=0)
+    return arr_np, valid
+
+
+def _sharded_config(shard_n: int, k: int, d: int, shards: int,
+                    config: EngineConfig | None,
+                    tune: str) -> EngineConfig:
+    """Resolve the per-shard engine configuration: explicit ``config``
+    wins; otherwise consult the tuning cache under the shard-count
+    signature (``repro.tune.signature(..., shards=)``), falling back to
+    the single-device signature of the per-shard problem, then to the
+    defaults. The tuned ``backend`` field is ignored here — the sharded
+    body realises its own pass; ``"force"`` degrades to ``"auto"`` (the
+    built-in measured search times single-device fits — tune the
+    sharded key explicitly with ``repro.tune.autotune(shards=...)`` and
+    a sharded measure hook)."""
+    if config is not None:
+        return config
+    if tune == "off":
+        return DEFAULT_CONFIG
+    from .. import tune as _tune
+    cfg = _tune.lookup(n=shard_n, k=k, d=d, shards=shards)
+    if cfg is None:
+        cfg = _tune.lookup(n=shard_n, k=k, d=d)
+    return cfg or DEFAULT_CONFIG
+
+
 def distributed_yinyang(points, init_centroids, mesh: Mesh,
                         axes: Sequence[str] = ("data",),
                         n_groups: int | None = None,
                         max_iters: int = 100, tol: float = 1e-4,
-                        compress: bool = False) -> KMeansResult:
+                        compress: bool = False, backend: str = "compact",
+                        config: EngineConfig | None = None,
+                        tune: str = "auto",
+                        max_branches: int = 12) -> KMeansResult:
     """Run filtered K-means with points sharded over ``axes`` of ``mesh``.
 
-    ``points`` may be a host array (it is sharded on entry) or already a
-    sharded jax.Array with the right layout.
+    ``backend="compact"`` (default) runs the engine's two-level
+    capacity-bucketed compaction per shard (see
+    :func:`make_fit_sharded_engine`); ``"dense"`` keeps the legacy
+    masked-dense per-shard pass (exact oracle; requires N divisible by
+    the shard count). ``tune`` consults the per-(platform, N, K, D,
+    shards) tuning cache for the compact body's capacities/crossovers;
+    ``config`` pins them explicitly.
+
+    ``points`` may be a host array (it is sharded — and, on the compact
+    path, padded to the shard lattice — on entry) or an already-sharded
+    jax.Array with the right layout.
     """
+    if backend not in ("compact", "dense"):
+        raise ValueError(f"unknown distributed backend {backend!r}; "
+                         f"expected 'compact' or 'dense'")
+    if tune not in ("auto", "off", "force"):
+        raise ValueError(f"unknown tune mode {tune!r}; expected "
+                         f"'auto', 'off' or 'force'")
     k = init_centroids.shape[0]
     if n_groups is None:
         n_groups = max(k // 10, 1)
     n_groups = int(min(n_groups, k))
     axes = tuple(axes)
-    fit_sharded = make_fit_sharded(mesh, axes, k, n_groups, max_iters,
-                                   tol, compress)
-    points = jax.device_put(points, NamedSharding(mesh, P(axes, None)))
-    init_c = jax.device_put(init_centroids.astype(jnp.float32),
-                            NamedSharding(mesh, P()))
-    c, a, i, evals, inertia = jax.jit(fit_sharded)(points, init_c)
-    return KMeansResult(c, a, i, evals, inertia)
+    shards = _mesh_shards(mesh, axes)
+    init_c = jnp.asarray(init_centroids, jnp.float32)
+
+    if backend == "dense":
+        n = points.shape[0]
+        if n % shards:
+            raise ValueError(
+                f"backend='dense' needs N ({n}) divisible by the shard "
+                f"count ({shards}); use backend='compact' for uneven "
+                f"shards")
+        fit_sharded = _jitted_fit_dense(mesh, axes, k, n_groups,
+                                        int(max_iters), float(tol),
+                                        bool(compress))
+        points = jax.device_put(points, NamedSharding(mesh, P(axes, None)))
+        init_d = jax.device_put(init_c, NamedSharding(mesh, P()))
+        c, a, i, evals, inertia = fit_sharded(points, init_d)
+        return KMeansResult(c, a, i, evals, inertia)
+
+    n, d = points.shape
+    if n % shards:
+        # uneven: materialise on host once to append the sentinel rows
+        pts_in, valid_np = _pad_sharded(
+            np.asarray(jax.device_get(points), np.float32), shards)
+    else:
+        # no padding needed: device-resident arrays stay on device
+        # (jnp.asarray is a no-op for committed f32 arrays)
+        pts_in = jnp.asarray(points, jnp.float32)
+        valid_np = np.ones((n,), bool)
+    shard_n = len(pts_in) // shards
+    cfg = _sharded_config(shard_n, k, d, shards, config, tune)
+
+    # group map + tables, built once on the host (true Lmax)
+    groups = group_centroids(init_c, n_groups)
+    groups_np = np.asarray(jax.device_get(groups))
+    members, gsize = build_group_tables(groups_np, n_groups)
+
+    fit_sharded = _jitted_fit_engine(
+        mesh, axes, k, n_groups, int(max_iters), float(tol), shard_n,
+        bool(compress), cfg, int(max_branches))
+    shard = NamedSharding(mesh, P(axes, None))
+    repl = NamedSharding(mesh, P())
+    args = (jax.device_put(pts_in, shard),
+            jax.device_put(valid_np, NamedSharding(mesh, P(axes))),
+            jax.device_put(init_c, repl),
+            jax.device_put(groups, repl),
+            jax.device_put(members, repl),
+            jax.device_put(gsize, repl))
+    c, a, i, evals, inertia = fit_sharded(*args)
+    return KMeansResult(c, a[:n], i, evals, inertia)
+
+
+# --------------------------------------------------------------------------
+# sharded streaming steps (driven by repro.streaming.StreamingKMeans)
+# --------------------------------------------------------------------------
+
+def make_stream_bounds_sharded(mesh: Mesh, axes: Sequence[str] = ("data",)):
+    """Sharded analogue of ``engine.stream_bounds``: the point-level
+    filter over carried (drift-inflated) bounds, per shard of one
+    global mini-batch. Returns a jitted ``(points, centroids, assign,
+    ub, lb) -> (ub_t, need, max_shard_cand, tightened)`` where
+    ``max_shard_cand`` is the pmax'd PER-SHARD candidate count — the
+    number the caller's static ``cap_n`` must cover."""
+    axes = tuple(axes)
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None), P(axes), P(axes),
+                  P(axes, None)),
+        out_specs=(P(axes), P(axes), P(), P()),
+        **_SHARD_MAP_KW,
+    )
+    def bounds(points, centroids, assign, ub, lb):
+        ub_t, need, n_cand, n_tight = stream_bounds(points, centroids,
+                                                    assign, ub, lb)
+        return (ub_t, need, jax.lax.pmax(n_cand, axes),
+                jax.lax.psum(n_tight, axes))
+
+    return jax.jit(bounds)
+
+
+def make_stream_update_sharded(mesh: Mesh, axes, *, k: int, n_groups: int,
+                               cap_n: int, cap_g: int, chunk: int = 2048,
+                               group_gather_factor: int = 4,
+                               compress: bool = False):
+    """Sharded analogue of ``engine.stream_update``: one global
+    mini-batch split over the mesh, the engine's compacted candidate
+    pass per shard (``cap_n`` must cover the max PER-SHARD candidate
+    count — the caller syncs it via :func:`make_stream_bounds_sharded`),
+    then the psum'd batch sums/counts feed the decayed count-weighted
+    centroid EMA, computed replicated so every shard agrees. Returns a
+    jitted function with the same :class:`~repro.core.engine.
+    StreamStepOut` result; ``assignments``/``ub``/``lb`` come back
+    sharded along ``axes`` (gathered to the global batch on read).
+    ``compress=True`` int8-compresses the (K, D) partial-sums psum
+    payload only."""
+    axes = tuple(axes)
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None), P(None), P(), P(None),
+                  P(None, None), P(None), P(axes), P(axes), P(axes, None),
+                  P(axes)),
+        out_specs=StreamStepOut(
+            P(None, None), P(None), P(axes), P(axes), P(axes, None),
+            P(), P(), P(None), P(None), P(None), P()),
+        **_SHARD_MAP_KW,
+    )
+    def update(points, centroids, counts, decay, groups, members, gsize,
+               assignments, ub_t, lb, need):
+        x2 = row_norms_sq(points)
+        c2 = row_norms_sq(centroids)
+        new_as, nub, nlb, pairs, gmax = compact_candidate_pass(
+            points, centroids, assignments, ub_t, lb, groups, members,
+            gsize, need, cap_n=cap_n, cap_g=cap_g, n_groups=n_groups,
+            chunk=chunk, opt_sq=True, x2=x2, c2=c2,
+            group_gather_factor=group_gather_factor)
+        bsums, bcounts = centroid_sums(points, new_as, k)
+        bsums = _psum_maybe_compressed(bsums, axes, compress)
+        bcounts = jax.lax.psum(bcounts, axes)
+        # the reduced sums/counts make the EMA (and drift) replicated;
+        # only the per-shard scalars still need reducing afterwards
+        out = stream_ema_and_decay(
+            centroids, counts, decay, bsums, bcounts, new_as, nub, nlb,
+            jax.lax.psum(pairs, axes), jax.lax.pmax(gmax, axes), groups,
+            n_groups=n_groups)
+        return out._replace(
+            batch_cost=jax.lax.psum(out.batch_cost, axes))
+
+    return jax.jit(update)

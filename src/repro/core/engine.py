@@ -24,7 +24,13 @@ filter levels as skipped work:
   refresh itself runs on the COMPACTED survivor buffer instead of all
   N rows (``refresh_ub=True`` in :func:`compact_candidate_pass`);
 * the Pallas block-skip kernel (``repro.kernels.grouped_assign``) slots
-  in as the TPU backend behind the same interface.
+  in as the TPU backend behind the same interface;
+* the bucket machinery also exists fully IN-TRACE for hostless loops
+  (:func:`cap_ladders` / :func:`select_bucket` /
+  :func:`ladder_candidate_pass`): a static capacity lattice switched
+  per iteration with ``lax.switch`` — what ``repro.core.distributed``
+  runs inside its ``shard_map`` body, where a host sync is not an
+  option.
 
 Backend selection (``backend=`` on :func:`fit`):
 
@@ -450,6 +456,118 @@ def compact_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
     ub_out = ub_t.at[sidx].set(nub, mode="drop")
     lb_out = lb.at[sidx].set(new_clb, mode="drop")
     return assignments, ub_out, lb_out, pairs, gmax
+
+
+def cap_ladders(n: int, n_groups: int, *, min_cap: int = 256,
+                max_branches: int = 12):
+    """Static (cap_n, cap_g) lattices for the IN-TRACE bucketed pass.
+
+    The batch driver picks capacities on the host between ``_run_loop``
+    segments; inside a ``shard_map`` body there is no host to ask, so
+    the whole lattice must be fixed at trace time and the shard switches
+    between levels with ``lax.switch`` (:func:`ladder_candidate_pass`).
+    Levels are the engine's usual power-of-two lattice from ``min_cap``
+    up to the shard size (resp. 1 up to ``n_groups``), coarsened until
+    the branch product fits ``max_branches`` compiled pass instances:
+    interior levels go first, then (only under a budget too small for
+    2x2 ladders) the LOW endpoints. The top levels are never dropped —
+    ``cap_ns[-1] == n`` is what makes the mandatory upshift in
+    :func:`select_bucket` always able to satisfy the pass's
+    ``cap_n >= count`` precondition.
+    """
+    n = max(int(n), 1)
+    n_groups = max(int(n_groups), 1)
+    cap_ns, c = [], min(_bucket_cap(min_cap, 1, n), n)
+    while c < n:
+        cap_ns.append(c)
+        c *= 2
+    cap_ns.append(n)
+    cap_gs, g = [], 1
+    while g < n_groups:
+        cap_gs.append(g)
+        g *= 2
+    cap_gs.append(n_groups)
+    while len(cap_ns) * len(cap_gs) > max(int(max_branches), 1):
+        if len(cap_gs) > 2 and len(cap_gs) >= len(cap_ns):
+            del cap_gs[len(cap_gs) // 2]
+        elif len(cap_ns) > 2:
+            del cap_ns[len(cap_ns) // 2]
+        elif len(cap_gs) > 1:
+            del cap_gs[0]
+        elif len(cap_ns) > 1:
+            del cap_ns[0]
+        else:
+            break
+    return tuple(cap_ns), tuple(cap_gs)
+
+
+def select_bucket(n_cand, gmax, level_n, level_g, *, cap_ns, cap_gs,
+                  down_n: int = 2, down_g: int = 4):
+    """Shard-local bucket transition — the traced analogue of the host
+    bucket picker in :func:`fit`.
+
+    Upshifts are mandatory the moment the pending candidate count (or
+    the observed surviving-group high-water) leaves its level;
+    downshifts only fire past the tuned hysteresis factors
+    (``EngineConfig.down_n`` / ``down_g``; 0 disables that axis), and
+    never on ``gmax == 0`` (no candidates seen — not evidence that one
+    group slot suffices). Returns the next ``(level_n, level_g)``.
+    """
+    cn = jnp.asarray(cap_ns, jnp.int32)
+    cg = jnp.asarray(cap_gs, jnp.int32)
+    req_n = jnp.minimum(jnp.searchsorted(cn, n_cand),
+                        len(cap_ns) - 1).astype(jnp.int32)
+    move = req_n > level_n
+    if down_n:
+        move = jnp.logical_or(move, jnp.logical_and(
+            req_n < level_n, n_cand * down_n <= cn[level_n]))
+    new_n = jnp.where(move, req_n, level_n)
+
+    req_g = jnp.minimum(jnp.searchsorted(cg, jnp.maximum(gmax, 1)),
+                        len(cap_gs) - 1).astype(jnp.int32)
+    move_g = req_g > level_g
+    if down_g:
+        move_g = jnp.logical_or(move_g, jnp.logical_and(
+            jnp.logical_and(gmax > 0, req_g < level_g),
+            gmax * down_g <= cg[level_g]))
+    new_g = jnp.where(move_g, req_g, level_g)
+    return new_n, new_g
+
+
+def ladder_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
+                          members, gsize, need, level_n, level_g, *,
+                          cap_ns, cap_gs, n_groups: int, chunk: int = 2048,
+                          group_gather_factor: int = 4, opt_sq: bool = True,
+                          x2=None, c2=None, refresh_ub: bool = False):
+    """:func:`compact_candidate_pass` at a TRACED capacity level.
+
+    One ``lax.switch`` over the static ``cap_ns`` x ``cap_gs`` lattice
+    (:func:`cap_ladders`); each branch is the compact pass compiled at
+    one (cap_n, cap_g) pair, with the gather-vs-GEMM crossover
+    (:func:`use_groups_decision`) resolved per branch at trace time.
+    This is what lets a ``shard_map`` body run the two-level compaction
+    with SHARD-LOCAL bucket choices and zero host syncs: every shard
+    executes only its selected branch, and no collectives live inside
+    the branches so shards in different buckets cannot desynchronise.
+    Correctness needs ``cap_ns[level_n] >= sum(need)`` — the mandatory
+    upshift in :func:`select_bucket` maintains it; ``cap_g`` stays a
+    guess (the pass's ``lax.cond`` spills to its dense branch).
+    """
+    branches = []
+    for cn in cap_ns:
+        for cg in cap_gs:
+            def branch(_, cn=cn, cg=cg):
+                return compact_candidate_pass(
+                    points, new_c, assignments, ub_t, lb, groups, members,
+                    gsize, need, cap_n=cn, cap_g=cg, n_groups=n_groups,
+                    chunk=chunk, use_groups=None, opt_sq=opt_sq, x2=x2,
+                    c2=c2, refresh_ub=refresh_ub,
+                    group_gather_factor=group_gather_factor)
+            branches.append(branch)
+    if len(branches) == 1:
+        return branches[0](None)
+    index = level_n * len(cap_gs) + level_g
+    return jax.lax.switch(index, branches, None)
 
 
 def pallas_candidate_pass(points, new_c, assignments, ub_t, lb, groups,
@@ -1007,7 +1125,19 @@ def stream_update(points, centroids, counts, decay, groups, members, gsize,
         need, cap_n=cap_n, cap_g=cap_g, n_groups=n_groups, chunk=chunk,
         opt_sq=True, x2=x2, c2=c2, group_gather_factor=group_gather_factor)
     bsums, bcounts = centroid_sums(points, new_as, k)
+    return stream_ema_and_decay(centroids, counts, decay, bsums, bcounts,
+                                new_as, nub, nlb, pairs, gmax, groups,
+                                n_groups=n_groups)
 
+
+def stream_ema_and_decay(centroids, counts, decay, bsums, bcounts, new_as,
+                         nub, nlb, pairs, gmax, groups, *, n_groups: int):
+    """The streaming step's epilogue — decayed count-weighted centroid
+    EMA, this step's drift, post-move bound decay — shared by the local
+    :func:`stream_update` and the sharded step
+    (``repro.core.distributed.make_stream_update_sharded``, which
+    psums ``bsums``/``bcounts`` before calling and reduces the scalar
+    outputs after). THE single copy of the update rule."""
     dec = counts * decay
     new_counts = dec + bcounts
     sums = dec[:, None] * centroids + bsums
@@ -1023,6 +1153,8 @@ def stream_update(points, centroids, counts, decay, groups, members, gsize,
     # ledger (inf - inf = NaN on the next inflation)
     gdrift = jnp.maximum(
         jax.ops.segment_max(drift, groups, num_segments=n_groups), 0.0)
+    # sentinel-padded rows (sharded caller) carry assignment K: the
+    # traced gather clamps, and the caller slices their ub/lb off
     out_ub = nub + drift[new_as]
     out_lb = jnp.maximum(nlb - gdrift[None, :], 0.0)
     return StreamStepOut(new_c, new_counts, new_as, out_ub, out_lb,

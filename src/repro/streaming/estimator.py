@@ -104,6 +104,17 @@ class StreamingKMeans:
     drift_reset_factor : drop a cached shard when accumulated group
         drift exceeds this multiple of its stored mean ub (bounds still
         valid, just vacuous — recomputing beats carrying them)
+    mesh / mesh_axes : a ``jax.sharding.Mesh`` (+ the point-sharded
+        axis names) routes every batch through the DISTRIBUTED step:
+        the global batch is split over ``mesh_axes``, each device runs
+        the engine's compacted candidate pass on its slice, and the
+        psum'd batch sums/counts feed the decayed EMA
+        (:func:`repro.core.distributed.make_stream_update_sharded`).
+        Batches that do not divide the shard count are padded with
+        sentinel rows (zero cost, no statistics). The drift ledger and
+        bound cache operate on the REDUCED (replicated) move, so the
+        whole bound-carry machinery is unchanged. ``mesh=None``
+        (default) keeps the single-device step.
     tune : 'auto' | 'off' — consult the per-(platform, B, K, D)
         tuning cache (:mod:`repro.tune`) at cold-start time (B = the
         first batch's size) and adopt the tuned ``min_cap`` -> bucket
@@ -123,7 +134,8 @@ class StreamingKMeans:
                  reseed_patience: int = 20,
                  drift_reset_factor: float = 8.0,
                  chunk: int | None = None,
-                 tune: str = "auto"):
+                 tune: str = "auto",
+                 mesh=None, mesh_axes=("data",)):
         if init not in ("k-means++", "random"):
             raise ValueError(f"unknown init {init!r}")
         if not 0.0 < decay <= 1.0:
@@ -147,6 +159,14 @@ class StreamingKMeans:
         self.chunk = int(chunk) if chunk is not None else 2048
         self.tune = tune
         self._ggf = 4                     # group-gather crossover factor
+        self.mesh = mesh
+        self.mesh_axes = tuple(mesh_axes)
+        self._n_shards = 1
+        if mesh is not None:
+            from ..core.distributed import _mesh_shards
+            self._n_shards = _mesh_shards(mesh, self.mesh_axes)
+        self._sharded_bounds = None       # built lazily per mesh
+        self._sharded_updates: dict = {}  # (cap_n, cap_g) -> jitted step
 
         self.stats_ = StreamStats()
         self.ewa_inertia_: float | None = None
@@ -245,11 +265,28 @@ class StreamingKMeans:
         self._step(pts, shard_id)
         return self
 
+    def _shard_put(self, arr, spec):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(arr, NamedSharding(self.mesh, P(*spec)))
+
+    def _sharded_update_fn(self, cap_n: int, cap_g: int):
+        from ..core import distributed as _dist
+        key = (cap_n, cap_g)
+        fn = self._sharded_updates.get(key)
+        if fn is None:
+            fn = _dist.make_stream_update_sharded(
+                self.mesh, self.mesh_axes, k=self.n_clusters,
+                n_groups=self._g, cap_n=cap_n, cap_g=cap_g,
+                chunk=self.chunk, group_gather_factor=self._ggf)
+            self._sharded_updates[key] = fn
+        return fn
+
     def _step(self, pts_np: np.ndarray, sid) -> None:
         b = pts_np.shape[0]
         g = self._g
-        pts = jnp.asarray(pts_np)
+        k = self.n_clusters
         st = self.stats_
+        ax = self.mesh_axes
 
         entry = self._cache.get(sid) if sid is not None else None
         if entry is not None:
@@ -260,44 +297,102 @@ class StreamingKMeans:
                 st.drift_resets += 1
                 entry = None
 
+        # distributed step: pad the global batch to the shard lattice
+        # with sentinel rows (assignment K drops out of the psum'd
+        # sums; ub=0 / lb=inf keeps them filtered — zero cost)
+        sharded = self.mesh is not None
+        pad = (-b) % self._n_shards if sharded else 0
+        if pad:
+            pts = jnp.asarray(np.concatenate(
+                [pts_np, np.zeros((pad, pts_np.shape[1]), np.float32)], 0))
+        else:
+            pts = jnp.asarray(pts_np)
+        bp = b + pad
+        shard_b = bp // self._n_shards if sharded else b
+
+        def _padded(real, fill):
+            if not pad:
+                return real
+            shape = (pad,) + real.shape[1:]
+            return np.concatenate(
+                [real, np.full(shape, fill, real.dtype)], 0)
+
         tightened = 0.0
         if entry is not None:
             st.cache_hits += 1
             ub_i, lb_i = inflate_bounds(entry, self._ledger.centroid,
                                         self._ledger.group)
-            assign = jnp.asarray(entry.assignments)
-            lb_d = jnp.asarray(lb_i)
-            ub_t, need, n_cand, n_tight = _engine.stream_bounds(
-                pts, self._centroids, assign, jnp.asarray(ub_i), lb_d)
+            assign = jnp.asarray(_padded(
+                entry.assignments.astype(np.int32), k))
+            ub_i = jnp.asarray(_padded(ub_i, 0.0))
+            lb_d = jnp.asarray(_padded(lb_i, np.inf))
+            if sharded:
+                if self._sharded_bounds is None:
+                    from ..core import distributed as _dist
+                    self._sharded_bounds = _dist.make_stream_bounds_sharded(
+                        self.mesh, ax)
+                ub_t, need, n_cand, n_tight = self._sharded_bounds(
+                    self._shard_put(pts, (ax, None)),
+                    self._shard_put(self._centroids, (None, None)),
+                    self._shard_put(assign, (ax,)),
+                    self._shard_put(ub_i, (ax,)),
+                    self._shard_put(lb_d, (ax, None)))
+            else:
+                ub_t, need, n_cand, n_tight = _engine.stream_bounds(
+                    pts, self._centroids, assign, ub_i, lb_d)
+            # sharded: n_cand is the pmax'd PER-SHARD candidate count —
+            # exactly what the static per-shard capacity must cover
             n_cand = int(n_cand)
             tightened = float(n_tight)
             gmax_guess = max(int(entry.gmax), 1)
         else:
             st.cache_misses += 1
-            assign = jnp.zeros((b,), jnp.int32)
-            ub_t = jnp.full((b,), jnp.inf, jnp.float32)
-            lb_d = jnp.zeros((b, g), jnp.float32)
-            need = jnp.ones((b,), bool)
-            n_cand = b
+            assign = jnp.asarray(_padded(np.zeros((b,), np.int32), k))
+            ub_t = jnp.asarray(_padded(
+                np.full((b,), np.inf, np.float32), 0.0))
+            lb_d = jnp.asarray(_padded(
+                np.zeros((b, g), np.float32), np.inf))
+            need = jnp.asarray(_padded(np.ones((b,), bool), False))
+            n_cand = shard_b if sharded else b
             gmax_guess = g
 
         # pow2 capacity lattice (cap_n >= candidate count is a hard
         # correctness requirement of the compact pass; cap_g is a guess
-        # the pass spills past safely)
-        cap_n = min(_bucket_cap(max(n_cand, 1), min(self.min_bucket, b), b),
-                    b)
+        # the pass spills past safely). Sharded: capacities are
+        # PER-SHARD — sized from the worst shard's candidate count.
+        cap_n = min(_bucket_cap(max(n_cand, 1),
+                                min(self.min_bucket, shard_b), shard_b),
+                    shard_b)
         cap_g = _bucket_cap(gmax_guess, 1, g)
-        out = _engine.stream_update(
-            pts, self._centroids, self._counts, jnp.float32(self.decay),
-            self._groups, self._members, self._gsize, assign, ub_t, lb_d,
-            need, k=self.n_clusters, n_groups=g, cap_n=cap_n, cap_g=cap_g,
-            chunk=self.chunk, group_gather_factor=self._ggf)
+        if sharded:
+            upd = self._sharded_update_fn(cap_n, cap_g)
+            out = upd(self._shard_put(pts, (ax, None)),
+                      self._shard_put(self._centroids, (None, None)),
+                      self._shard_put(self._counts, (None,)),
+                      self._shard_put(jnp.float32(self.decay), ()),
+                      self._shard_put(self._groups, (None,)),
+                      self._shard_put(self._members, (None, None)),
+                      self._shard_put(self._gsize, (None,)),
+                      self._shard_put(assign, (ax,)),
+                      self._shard_put(ub_t, (ax,)),
+                      self._shard_put(lb_d, (ax, None)),
+                      self._shard_put(need, (ax,)))
+            st.sharded_batches += 1
+        else:
+            out = _engine.stream_update(
+                pts, self._centroids, self._counts,
+                jnp.float32(self.decay), self._groups, self._members,
+                self._gsize, assign, ub_t, lb_d, need, k=k, n_groups=g,
+                cap_n=cap_n, cap_g=cap_g, chunk=self.chunk,
+                group_gather_factor=self._ggf)
         self._centroids, self._counts = out.centroids, out.counts
 
         (nas_np, ub_np, lb_np, pairs, gmax, drift_np, gdrift_np,
          bcounts_np, bcost) = jax.device_get(
             (out.assignments, out.ub, out.lb, out.pairs, out.gmax,
              out.drift, out.gdrift, out.batch_counts, out.batch_cost))
+        if pad:
+            nas_np, ub_np, lb_np = nas_np[:b], ub_np[:b], lb_np[:b]
         self._ledger.add(drift_np.astype(np.float64),
                          gdrift_np.astype(np.float64))
 

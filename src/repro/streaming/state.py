@@ -35,6 +35,7 @@ class StreamStats:
     drift_resets: int = 0
     reseeds: int = 0
     init_batches: int = 0     # batches buffered for the cold-start init
+    sharded_batches: int = 0  # batches run through the distributed step
 
 
 @dataclasses.dataclass

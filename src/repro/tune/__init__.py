@@ -31,10 +31,12 @@ __all__ = [
 
 
 def lookup(*, n: int, k: int, d: int, platform: str | None = None,
+           shards: int = 1,
            cache: TuneCache | None = None) -> EngineConfig | None:
     """Tuned config for a problem signature, or None on a cache miss.
     This is the (cheap, in-memory after first disk read) call on
-    ``engine.fit``'s hot path when ``tune != "off"``."""
+    ``engine.fit``'s hot path when ``tune != "off"``. ``shards > 1``
+    queries the distributed-engine key (``n`` = per-shard points)."""
     if cache is None:
         cache = default_cache()
-    return cache.lookup(signature(n, k, d, platform))
+    return cache.lookup(signature(n, k, d, platform, shards=shards))

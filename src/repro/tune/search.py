@@ -102,19 +102,22 @@ def autotune(points, init_c, *, n_groups=None, max_iters: int = 50,
              tol: float = 1e-4, cache: TuneCache | None = None,
              measure=None, repeats: int = 3, max_rounds: int = 2,
              max_measurements: int = 32, platform: str | None = None,
-             verbose: bool = False) -> EngineConfig:
+             shards: int = 1, verbose: bool = False) -> EngineConfig:
     """Search the engine configuration space for this problem and
     persist the winner under its (platform, N, K, D) signature.
 
     Returns the winning :class:`EngineConfig`. ``measure`` overrides
     the wall-clock measurement (tests use a stub); ``max_measurements``
-    bounds the total number of distinct configs measured.
+    bounds the total number of distinct configs measured. ``shards >
+    1`` stores the winner under the DISTRIBUTED key (``points`` then
+    being one shard's worth): pass a ``measure`` that times the sharded
+    fit — the built-in timing measure runs single-device.
     """
     if platform is None:
         platform = jax.default_backend()
     n, d = points.shape
     k = init_c.shape[0]
-    sig = signature(n, k, d, platform)
+    sig = signature(n, k, d, platform, shards=shards)
     if cache is None:
         cache = default_cache()
     if measure is None:

@@ -7,6 +7,14 @@ backend/realisation, N the capacity lattice, K the candidate-pass GEMM
 minor dim, D the arithmetic intensity of every distance. N is bucketed
 to its power-of-two ceiling — the engine's own capacity lattice is
 pow2, so two problems in the same bucket compile the same programs.
+
+The DISTRIBUTED engine adds a shard-count dimension (``shards=``): a
+per-shard capacity ladder tuned for one shard of an S-way fit is not
+interchangeable with the single-device config for the same per-shard N
+(the sharded body pays psum latency per iteration, which moves the
+bucket/crossover trade-offs), so sharded winners are keyed separately
+as ``...|sS``. ``shards=1`` (the default) keeps the original key format
+— existing caches stay valid.
 """
 from __future__ import annotations
 
@@ -18,8 +26,13 @@ def pow2_bucket(n: int) -> int:
     return 1 << (max(int(n), 1) - 1).bit_length()
 
 
-def signature(n: int, k: int, d: int, platform: str | None = None) -> str:
-    """Cache key for a (platform, N, K, D) problem class."""
+def signature(n: int, k: int, d: int, platform: str | None = None,
+              shards: int = 1) -> str:
+    """Cache key for a (platform, N, K, D[, shards]) problem class.
+    ``n`` is the PER-SHARD point count when ``shards > 1``."""
     if platform is None:
         platform = jax.default_backend()
-    return f"{platform}|n{pow2_bucket(n)}|k{int(k)}|d{int(d)}"
+    sig = f"{platform}|n{pow2_bucket(n)}|k{int(k)}|d{int(d)}"
+    if int(shards) > 1:
+        sig += f"|s{int(shards)}"
+    return sig

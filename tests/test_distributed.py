@@ -10,6 +10,10 @@ import textwrap
 
 import pytest
 
+# every test here spawns a forced-multi-device subprocess — CI runs
+# them in the dedicated multi-device lane
+pytestmark = pytest.mark.multidevice
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -22,6 +26,169 @@ def _run(body: str) -> str:
                          capture_output=True, text=True, timeout=560)
     assert out.returncode == 0, f"STDOUT:{out.stdout}\nSTDERR:{out.stderr}"
     return out.stdout
+
+
+def test_sharded_compact_parity_matrix():
+    """The tentpole contract: the capacity-bucketed compaction inside
+    the shard_map body is EXACT — bit-identical assignments/inertia to
+    the sharded masked-dense oracle (same psum reduction order), with
+    and without int8 partial-sums compression, and it matches the
+    single-device engine's fixed point; psum'd distance_evals show the
+    per-shard filter actually skipping work."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import distributed_yinyang, engine_fit, \\
+            kmeans_plusplus
+        from repro.data import make_points
+        pts_np, _, _ = make_points(4096, 32, 64, seed=0)
+        pts = jnp.asarray(pts_np)
+        init = kmeans_plusplus(jax.random.PRNGKey(1), pts, 64)
+        mesh = jax.make_mesh((8,), ("data",))
+        kw = dict(max_iters=40, tol=1e-5)
+
+        for compress in (False, True):
+            r_d = distributed_yinyang(pts, init, mesh, backend="dense",
+                                      compress=compress, **kw)
+            r_c = distributed_yinyang(pts, init, mesh, backend="compact",
+                                      compress=compress, **kw)
+            assert np.array_equal(np.asarray(r_d.assignments),
+                                  np.asarray(r_c.assignments)), compress
+            assert float(r_d.inertia) == float(r_c.inertia), compress
+            assert int(r_d.n_iters) == int(r_c.n_iters), compress
+
+        r_c = distributed_yinyang(pts, init, mesh, backend="compact", **kw)
+        r_s = engine_fit(pts, init, backend="compact", tune="off", **kw)
+        assert np.array_equal(np.asarray(r_c.assignments),
+                              np.asarray(r_s.assignments))
+        np.testing.assert_allclose(float(r_c.inertia), float(r_s.inertia),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(r_c.centroids),
+                                   np.asarray(r_s.centroids), atol=1e-4)
+        # work-efficiency: psum'd evals beat the dense equivalent
+        dense_equiv = 4096 * 64 * (int(r_c.n_iters) + 1)
+        assert float(r_c.distance_evals) < dense_equiv, \\
+            (float(r_c.distance_evals), dense_equiv)
+        print("PARITY-MATRIX-OK")
+    """)
+
+
+def test_sharded_compact_uneven_and_all_survivor_shards():
+    """Uneven N (sentinel padding) and a pathological shard whose
+    points never filter (uniform noise -> every point a candidate ->
+    that shard rides the TOP capacity bucket while the clustered
+    shards downshift): shard-divergent bucket levels must not desync
+    the collectives or perturb the fixed point."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import distributed_yinyang, engine_fit, \\
+            kmeans_plusplus
+        from repro.data import make_points
+        mesh = jax.make_mesh((8,), ("data",))
+        kw = dict(max_iters=40, tol=1e-5)
+
+        # uneven: N=4001 over 8 shards (pad rows are sentinels)
+        pts_np, _, _ = make_points(4001, 16, 24, seed=3)
+        pts = jnp.asarray(pts_np)
+        init = kmeans_plusplus(jax.random.PRNGKey(1), pts, 24)
+        r_c = distributed_yinyang(pts, init, mesh, backend="compact", **kw)
+        r_s = engine_fit(pts, init, backend="compact", tune="off", **kw)
+        assert r_c.assignments.shape == (4001,)
+        assert np.array_equal(np.asarray(r_c.assignments),
+                              np.asarray(r_s.assignments))
+        np.testing.assert_allclose(float(r_c.inertia), float(r_s.inertia),
+                                   rtol=1e-5)
+
+        # all-survivors shard: shard 0 = structureless uniform noise
+        # (bounds never prune it), shards 1..7 = tight clusters
+        rng = np.random.default_rng(7)
+        clustered, _, _ = make_points(3584, 16, 24, seed=4,
+                                      cluster_std=0.3)
+        noise = rng.uniform(-20, 20, size=(512, 16)).astype(np.float32)
+        pts = jnp.asarray(np.concatenate([noise, clustered], axis=0))
+        init = kmeans_plusplus(jax.random.PRNGKey(2), pts, 24)
+        r_d = distributed_yinyang(pts, init, mesh, backend="dense", **kw)
+        r_c = distributed_yinyang(pts, init, mesh, backend="compact", **kw)
+        assert np.array_equal(np.asarray(r_d.assignments),
+                              np.asarray(r_c.assignments))
+        assert float(r_d.inertia) == float(r_c.inertia)
+        print("UNEVEN-SURVIVOR-OK")
+    """)
+
+
+def test_sharded_streaming_matches_local():
+    """StreamingKMeans(mesh=...): the distributed partial_fit (psum'd
+    batch sums/counts feeding the decayed EMA) matches the local step
+    on counts and distance evals exactly, and on centroids to psum
+    rounding; uneven batches exercise the sentinel padding."""
+    _run("""
+        import jax, numpy as np
+        from repro.streaming import StreamingKMeans
+        from repro.data import PointStream
+        mesh = jax.make_mesh((8,), ("data",))
+        # 997 % 8 != 0 -> every batch pads
+        stream = PointStream(shard_size=997, n_shards=4, n_dims=16, k=8,
+                             seed=3)
+        sk_l = StreamingKMeans(8, seed=5)
+        sk_d = StreamingKMeans(8, seed=5, mesh=mesh)
+        sk_l.fit_stream(stream, epochs=3)
+        sk_d.fit_stream(stream, epochs=3)
+        assert sk_d.stats_.sharded_batches == sk_d.stats_.batches > 0
+        assert sk_d.stats_.cache_hits == sk_l.stats_.cache_hits > 0
+        # the psum'd EMA differs from the local one by summation-order
+        # rounding, so margin-riding filter decisions may flip: evals
+        # agree to ~1%, effective counts to a few points, the total
+        # effective mass exactly
+        el, ed = sk_l.stats_.distance_evals, sk_d.stats_.distance_evals
+        assert abs(el - ed) <= 0.02 * el, (el, ed)
+        assert float(sk_d.counts_.sum()) == float(sk_l.counts_.sum())
+        np.testing.assert_allclose(sk_d.counts_, sk_l.counts_, atol=8)
+        np.testing.assert_allclose(sk_d.cluster_centers_,
+                                   sk_l.cluster_centers_, atol=1e-3)
+        full = np.concatenate([stream.shard(s) for s in range(4)], 0)
+        i_l, i_d = sk_l.inertia_of(full), sk_d.inertia_of(full)
+        assert abs(i_l - i_d) <= 1e-4 * max(i_l, 1.0)
+        # the PrefetchingLoader/global_batch protocol drives the same
+        # sharded step
+        sk_g = StreamingKMeans(8, seed=5, mesh=mesh)
+        sk_g.fit_stream([stream.global_batch(s) for s in range(4)])
+        assert sk_g.stats_.sharded_batches == 4
+        print("SHARDED-STREAM-OK")
+    """)
+
+
+def test_sharded_fit_adopts_tuned_shard_config():
+    """make_fit_sharded(tune=): a tuned entry stored under the
+    shard-count signature steers the compact body's capacities, and the
+    result stays exact (tuning is wall-clock-only, also in the
+    distributed engine)."""
+    _run("""
+        import os, jax, jax.numpy as jnp, numpy as np
+        os.environ["REPRO_KMEANS_TUNE_CACHE"] = "/tmp/dist_tune.json"
+        import repro.tune as tune
+        tune.set_default_cache(None)
+        from repro.core import distributed_yinyang, kmeans_plusplus
+        from repro.core.engine import EngineConfig
+        from repro.data import make_points
+        pts_np, _, _ = make_points(4096, 16, 24, seed=0)
+        pts = jnp.asarray(pts_np)
+        init = kmeans_plusplus(jax.random.PRNGKey(1), pts, 24)
+        mesh = jax.make_mesh((8,), ("data",))
+        kw = dict(max_iters=30, tol=1e-5)
+        r_ref = distributed_yinyang(pts, init, mesh, tune="off", **kw)
+        # per-shard n = 512; store a deliberately odd sharded config
+        cfg = EngineConfig(min_cap=64, chunk=1024, down_n=4,
+                           refresh_in_pass=True)
+        sig = tune.signature(512, 24, 16, shards=8)
+        assert sig.endswith("|s8")
+        tune.default_cache().store(sig, cfg, ms=1.0)
+        assert tune.lookup(n=512, k=24, d=16, shards=8) == cfg
+        r_tuned = distributed_yinyang(pts, init, mesh, tune="auto", **kw)
+        assert np.array_equal(np.asarray(r_ref.assignments),
+                              np.asarray(r_tuned.assignments))
+        np.testing.assert_allclose(float(r_ref.inertia),
+                                   float(r_tuned.inertia), rtol=1e-6)
+        print("SHARD-TUNE-OK")
+    """)
 
 
 def test_distributed_kmeans_matches_single_device():

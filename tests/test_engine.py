@@ -165,3 +165,74 @@ def test_not_fitted_error():
         km.labels_
     with pytest.raises(ValueError):
         km.predict(jnp.zeros((3, 2)))
+
+
+# -- the in-trace bucket machinery (consumed by core.distributed) ----------
+
+def test_cap_ladders_shape_and_budget():
+    cap_ns, cap_gs = engine.cap_ladders(819, 6, min_cap=256)
+    assert cap_ns[0] == 256 and cap_ns[-1] == 819
+    assert cap_gs[0] == 1 and cap_gs[-1] == 6
+    assert list(cap_ns) == sorted(cap_ns)
+    # the branch budget coarsens interiors but never the top endpoints
+    cap_ns, cap_gs = engine.cap_ladders(1 << 16, 64, min_cap=64,
+                                        max_branches=8)
+    assert len(cap_ns) * len(cap_gs) <= 8
+    assert cap_ns[-1] == 1 << 16 and cap_gs[-1] == 64
+    # degenerate problems collapse to a single level
+    assert engine.cap_ladders(100, 1, min_cap=256) == ((100,), (1,))
+
+
+def test_select_bucket_hysteresis_and_mandatory_upshift():
+    cap_ns, cap_gs = (256, 512, 1024), (1, 4, 8)
+    kw = dict(cap_ns=cap_ns, cap_gs=cap_gs, down_n=2, down_g=4)
+
+    def sel(n_cand, gmax, ln, lg):
+        ln, lg = engine.select_bucket(
+            jnp.int32(n_cand), jnp.int32(gmax), jnp.int32(ln),
+            jnp.int32(lg), **kw)
+        return int(ln), int(lg)
+
+    assert sel(1000, 6, 0, 0) == (2, 2)       # mandatory upshift
+    assert sel(300, 2, 1, 1) == (1, 1)        # inside hysteresis: hold
+    assert sel(100, 1, 2, 2) == (0, 0)        # past hysteresis: drop
+    assert sel(600, 3, 2, 1) == (2, 1)        # 600*2 > 1024: hold
+    # gmax == 0 is "no candidates seen", never downshift evidence
+    assert sel(100, 0, 2, 2) == (0, 2)
+    # down_n=0 / down_g=0 disable that axis entirely
+    ln, lg = engine.select_bucket(
+        jnp.int32(100), jnp.int32(1), jnp.int32(2), jnp.int32(2),
+        cap_ns=cap_ns, cap_gs=cap_gs, down_n=0, down_g=0)
+    assert (int(ln), int(lg)) == (2, 2)
+
+
+def test_ladder_candidate_pass_matches_fixed_cap():
+    """The lax.switch'ed pass at any level equals compact_candidate_pass
+    at that level's static caps (same numerics, only dispatch added)."""
+    pts, init = _dataset(1024, 8, 24, seed=5)
+    k, g = 24, 4
+    from repro.core.kmeans import _init_filter_state, group_centroids
+    from repro.core.distances import row_norms_sq
+    groups = engine.group_centroids(init, g)
+    groups_np = np.asarray(jax.device_get(groups))
+    members, gsize = engine.build_group_tables(groups_np, g)
+    x2 = row_norms_sq(pts)
+    c2 = row_norms_sq(init)
+    st = _init_filter_state(pts, init, groups, g, x2=x2, c2=c2)
+    # 200 survivors: inside even the smallest level's capacity (the
+    # cap_n >= count precondition holds at every level under test)
+    need = jnp.arange(1024) < 200
+    cap_ns, cap_gs = (256, 1024), (2, 4)
+    for ln in range(2):
+        for lg in range(2):
+            ref = engine.compact_candidate_pass(
+                pts, init, st.assignments, st.ub, st.lb, groups, members,
+                gsize, need, cap_n=cap_ns[ln], cap_g=cap_gs[lg],
+                n_groups=g, x2=x2, c2=c2)
+            out = engine.ladder_candidate_pass(
+                pts, init, st.assignments, st.ub, st.lb, groups, members,
+                gsize, need, jnp.int32(ln), jnp.int32(lg),
+                cap_ns=cap_ns, cap_gs=cap_gs, n_groups=g, x2=x2, c2=c2)
+            for a, b in zip(ref, out):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))

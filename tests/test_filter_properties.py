@@ -14,6 +14,10 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
+# CI runs the hypothesis sweeps in their own lane (-m slow); the quick
+# tier-1 lane deselects them with -m "not slow"
+pytestmark = pytest.mark.slow
+
 from repro.core import lloyd, yinyang
 from repro.core.distances import pairwise_dists
 from repro.core.kmeans import (_filtered_step, _init_filter_state,

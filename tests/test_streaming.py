@@ -213,6 +213,7 @@ try:
 except ImportError:
     pass
 else:
+    @pytest.mark.slow
     @settings(deadline=None, max_examples=25)
     @given(st.integers(0, 2 ** 16), st.integers(1, 6),
            st.floats(0.01, 2.0))

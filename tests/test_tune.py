@@ -319,3 +319,41 @@ def test_use_groups_decision_follows_tuned_crossover(tmp_cache):
         np.asarray(results[2][0].assignments),
         np.asarray(results[8][0].assignments))
     assert float(results[2][0].inertia) == float(results[8][0].inertia)
+
+
+# -- shard-count signature dimension (the distributed engine's key) --------
+
+def test_signature_shard_dimension(tmp_cache):
+    # shards=1 keeps the original key format: existing caches stay valid
+    base = tune.signature(3000, 64, 32, "cpu")
+    assert base == tune.signature(3000, 64, 32, "cpu", shards=1)
+    assert "|s" not in base
+    s8 = tune.signature(3000, 64, 32, "cpu", shards=8)
+    assert s8 == base + "|s8"
+    # per-shard N buckets independently of the shard count
+    assert tune.signature(819, 64, 32, "cpu", shards=4) == \
+        "cpu|n1024|k64|d32|s4"
+
+    # sharded winners resolve only under their own key
+    cfg = EngineConfig(min_cap=64, chunk=1024)
+    tmp_cache.store(tune.signature(819, 64, 32, shards=4), cfg, ms=1.0)
+    assert tune.lookup(n=819, k=64, d=32, shards=4) == cfg
+    assert tune.lookup(n=819, k=64, d=32) is None
+    assert tune.lookup(n=819, k=64, d=32, shards=8) is None
+
+
+def test_autotune_stores_under_shard_signature(tmp_cache):
+    pts, init = _dataset(512, 8, 16)
+    calls = []
+
+    def measure(cfg):
+        calls.append(cfg)
+        return 1.0 if cfg.backend == "lloyd" else 0.5
+
+    best = tune.autotune(pts, init, cache=tmp_cache, measure=measure,
+                         max_rounds=0, shards=4)
+    sig = tune.signature(512, 16, 8, shards=4)
+    assert sig.endswith("|s4")
+    assert tmp_cache.lookup(sig) == best
+    # the single-device key is untouched
+    assert tmp_cache.lookup(tune.signature(512, 16, 8)) is None
