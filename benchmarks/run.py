@@ -32,7 +32,12 @@ tuned configurations.
 * requires the streaming fit's inertia gap to stay within 5% of the
   batch engine;
 * requires the committed ``distributed`` record (when present) to keep
-  compact/dense parity and a per-shard work reduction > 1.0.
+  compact/dense parity and a per-shard work reduction > 1.0;
+* smoke-measures the tiled predict path (``predict_bench``): exact
+  parity with the dense argmin gates, throughput is logged;
+* runs the deterministic weighted-parity gate: uniform ``sample_weight``
+  bit-identical to unweighted on every backend, integer weights ==
+  duplicated points.
 
 Exit codes are per-gate so CI logs say which tripped: 0 = all OK,
 1 = wall-clock / mean-speedup / distributed regression (the per-dataset
@@ -44,10 +49,55 @@ import argparse
 import sys
 
 
+def weighted_parity_gate() -> bool:
+    """Deterministic sample-weight gate: uniform weights must be
+    BIT-IDENTICAL to the unweighted fit on every engine backend, and
+    integer weights must land on the duplicated-points fixed point.
+    Pure correctness (no timing), so it either holds or the weight
+    threading regressed."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import engine_fit, kmeans_plusplus
+    from repro.data import make_points
+
+    pts_np, _, _ = make_points(1200, 8, 12, seed=0)
+    pts = jnp.asarray(pts_np)
+    init = kmeans_plusplus(jax.random.PRNGKey(1), pts, 12)
+    ok = True
+    for backend in ("oracle", "compact", "lloyd"):
+        r0 = engine_fit(pts, init, max_iters=30, tol=1e-5,
+                        backend=backend, tune="off")
+        r1 = engine_fit(pts, init, max_iters=30, tol=1e-5,
+                        backend=backend, tune="off",
+                        sample_weight=jnp.ones((1200,)))
+        bit = np.array_equal(np.asarray(r0.assignments),
+                             np.asarray(r1.assignments)) and \
+            float(r0.inertia) == float(r1.inertia)
+        ok &= bit
+        print(f"check: weighted-parity uniform/{backend}: "
+              f"{'OK' if bit else 'REGRESSION'}")
+    rng = np.random.default_rng(0)
+    wts = rng.integers(1, 4, size=1200)
+    r_w = engine_fit(pts, init, max_iters=40, tol=1e-6,
+                     backend="compact", tune="off",
+                     sample_weight=jnp.asarray(wts, jnp.float32))
+    r_d = engine_fit(jnp.asarray(np.repeat(pts_np, wts, axis=0)), init,
+                     max_iters=40, tol=1e-6, backend="compact",
+                     tune="off")
+    dup = bool(np.allclose(np.asarray(r_w.centroids),
+                           np.asarray(r_d.centroids), atol=1e-3))
+    ok &= dup
+    print(f"check: weighted-parity duplication==int-weights: "
+          f"{'OK' if dup else 'REGRESSION'}")
+    return ok
+
+
 def check(args) -> None:
     import json
 
-    from . import kmeans_speedup, streaming_bench
+    from . import kmeans_speedup, predict_bench, streaming_bench
 
     try:
         with open(args.json) as fh:
@@ -113,7 +163,20 @@ def check(args) -> None:
     print(f"check: streaming inertia_gap={srow['inertia_gap'] * 100:+.2f}% "
           f"(limit +5%) -> {'OK' if gap_ok else 'REGRESSION'}")
 
-    engine_ok = wall_ok and speed_ok and dist_ok
+    # predict-throughput smoke row: the tiled PassCore assign must be
+    # exact (parity with the dense argmin is structural) and actually
+    # move points; throughput is printed for the log, only parity gates
+    prow = predict_bench.run(scale=scale)
+    predict_ok = prow["labels_match_dense"] and \
+        prow["points_per_sec"] > 0
+    print(f"check: predict smoke pps={prow['points_per_sec']:.0f} "
+          f"parity={'OK' if prow['labels_match_dense'] else 'FAIL'} -> "
+          f"{'OK' if predict_ok else 'REGRESSION'}")
+
+    weighted_ok = weighted_parity_gate()
+
+    engine_ok = wall_ok and speed_ok and dist_ok and predict_ok and \
+        weighted_ok
     if engine_ok and gap_ok:
         sys.exit(0)
     if engine_ok and not gap_ok:
@@ -125,6 +188,8 @@ def check(args) -> None:
     tripped = [name for name, ok in (("wall-clock", wall_ok),
                                      ("mean_speedup", speed_ok),
                                      ("distributed", dist_ok),
+                                     ("predict", predict_ok),
+                                     ("weighted-parity", weighted_ok),
                                      ("streaming-gap", gap_ok)) if not ok]
     print(f"check: FAILED gate(s): {', '.join(tripped)} (exit 1)")
     sys.exit(1)
@@ -157,7 +222,8 @@ def main() -> None:
     scale = 0.1 if args.quick else 1.0
 
     from . import filter_efficiency, group_sweep, kernel_bench
-    from . import kmeans_speedup, roofline_report, streaming_bench
+    from . import (kmeans_speedup, predict_bench, roofline_report,
+                   streaming_bench)
 
     if args.tune:
         from . import autotune
@@ -169,6 +235,8 @@ def main() -> None:
     kmeans_speedup.main(scale=scale, json_path=args.json or None)
     print("# === streaming / mini-batch subsystem ===", flush=True)
     streaming_bench.main(scale=scale, json_path=args.json or None)
+    print("# === predict path (tiled PassCore assign) ===", flush=True)
+    predict_bench.main(scale=scale, json_path=args.json or None)
     print("# === distributed engine (forced multi-device CPU) ===",
           flush=True)
     # subprocess: the forced device count must be set before jax

@@ -73,6 +73,29 @@ def main():
           f"work_red={st.points_seen * 256 / max(st.distance_evals, 1):.1f}x "
           f"inertia gap vs batch: {gap * 100:+.2f}%")
 
+    # weighted clustering: sample_weight threads through every backend
+    # and driver via the one PassCore implementation — uniform weights
+    # are bit-identical to the unweighted fit, and integer weights are
+    # exactly equivalent to duplicating points (cheaper by the weight
+    # mass). Demo: upweight the first blob 5x and watch its centroid
+    # mass grow without touching the filter work.
+    import numpy as np
+    from repro.core import KMeans
+    km = KMeans(n_clusters=8, engine="auto", seed=1)
+    sub = np.asarray(pts_np[:8192])
+    w = np.where(np.arange(len(sub)) < 1024, 5.0, 1.0).astype(np.float32)
+    km.fit(sub, sample_weight=w)
+    print(f"weighted fit: inertia={km.inertia_:.1f} "
+          f"score(training)={km.score(sub, sample_weight=w):.1f}")
+
+    # the predict path: tiled PassCore assignment — no (N, K) distance
+    # matrix, norm-cached, exact. transform() gives the sklearn
+    # cluster-distance space (tiled too), fit_predict the one-call fit.
+    labels = km.predict(sub)
+    print(f"predict (tiled): {len(labels)} labels, "
+          f"first tile matches transform argmin: "
+          f"{bool((labels[:100] == km.transform(sub[:100]).argmin(1)).all())}")
+
     # distributed (shard_map) — uses however many devices exist
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("data",))

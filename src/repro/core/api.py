@@ -85,6 +85,7 @@ class KMeans:
         self.tune = tune
         self.result_: _km.KMeansResult | None = None
         self._stream = None
+        self._assign_tables = None  # cached (groups, members, gsize, g)
 
     def _init_centroids(self, points):
         key = jax.random.PRNGKey(self.seed)
@@ -92,25 +93,37 @@ class KMeans:
             return kmeans_plusplus(key, points, self.n_clusters)
         return random_init(key, points, self.n_clusters)
 
-    def fit(self, points) -> "KMeans":
+    def fit(self, points, sample_weight=None) -> "KMeans":
+        """Batch fit. ``sample_weight``: optional (N,) per-point
+        weights — weighted centroid means and inertia through every
+        backend (the filters are weight-independent, so the work
+        saving is unchanged); ``None`` is bit-identical to uniform
+        weights of 1.0."""
         points = jnp.asarray(points)
+        weights = None if sample_weight is None else \
+            jnp.asarray(sample_weight, jnp.float32)
         init_c = self._init_centroids(points)
         if self.algorithm == "lloyd":
-            res = _km.lloyd(points, init_c, self.max_iters, self.tol)
+            res = _km.lloyd(points, init_c, self.max_iters, self.tol,
+                            weights=weights)
         else:
             n_groups = 1 if self.algorithm == "hamerly" else self.n_groups
             if self.engine is None:
                 res = _km.yinyang(points, init_c, n_groups=n_groups,
-                                  max_iters=self.max_iters, tol=self.tol)
+                                  max_iters=self.max_iters, tol=self.tol,
+                                  weights=weights)
             else:
                 res = _engine.fit(points, init_c, n_groups=n_groups,
                                   max_iters=self.max_iters, tol=self.tol,
-                                  backend=self.engine, tune=self.tune)
+                                  backend=self.engine, tune=self.tune,
+                                  sample_weight=weights)
         self.result_ = jax.tree.map(jax.device_get, res)
         self._stream = None       # a batch fit supersedes any stream state
+        self._assign_tables = None
         return self
 
-    def partial_fit(self, points, shard_id=None) -> "KMeans":
+    def partial_fit(self, points, shard_id=None,
+                    sample_weight=None) -> "KMeans":
         """Streaming mini-batch update (delegates to
         :class:`repro.streaming.StreamingKMeans`).
 
@@ -143,13 +156,15 @@ class KMeans:
             self._stream = _streaming.StreamingKMeans(
                 self.n_clusters, n_groups=n_groups, init=self.init,
                 decay=self.decay, seed=self.seed, tune=self.tune)
-        s = self._stream.partial_fit(points, shard_id=shard_id)
+        s = self._stream.partial_fit(points, shard_id=shard_id,
+                                     sample_weight=sample_weight)
         if s.initialized:
             self.result_ = _km.KMeansResult(
                 s.cluster_centers_, s.labels_,
                 np.int32(s.stats_.batches),
                 np.float32(s.stats_.distance_evals),
                 np.float32(s.ewa_inertia_))
+            self._assign_tables = None    # centroids moved this batch
         return self
 
     def _fitted(self) -> _km.KMeansResult:
@@ -182,7 +197,58 @@ class KMeans:
         """Work-efficiency counter: distance evaluations performed."""
         return float(self._fitted().distance_evals)
 
+    # inference ---------------------------------------------------------------
+
+    def _tables(self):
+        """Group tables over the FITTED centroids, built once and
+        reused by every predict/score call (invalidated by fit /
+        partial_fit)."""
+        if self._assign_tables is None:
+            centroids = jnp.asarray(self._fitted().centroids, jnp.float32)
+            g = self.n_groups if self.algorithm == "yinyang" else 1
+            groups, members, gsize = _engine.build_assign_tables(
+                centroids, g)
+            self._assign_tables = (centroids, groups, members, gsize)
+        return self._assign_tables
+
+    def _assign(self, points):
+        centroids, groups, members, gsize = self._tables()
+        return _engine.assign(points, centroids, groups=groups,
+                              members=members, gsize=gsize)
+
     def predict(self, points):
-        from .distances import pairwise_dists
-        d = pairwise_dists(jnp.asarray(points), self._fitted().centroids)
-        return jax.device_get(jnp.argmin(d, axis=1))
+        """Tiled exact nearest-centroid assignment through the PassCore
+        candidate pass (``engine.assign``): norm-cached, no O(N*K)
+        distance buffer at large N."""
+        labels, _ = self._assign(points)
+        return jax.device_get(labels)
+
+    def fit_predict(self, points, sample_weight=None):
+        """Fit, then return the training assignments (sklearn parity:
+        equivalent to ``fit(X).labels_`` but one call)."""
+        return self.fit(points, sample_weight=sample_weight).labels_
+
+    def transform(self, points):
+        """Distances of ``points`` to every fitted centroid, (N, K) —
+        sklearn's cluster-distance space. The output is O(N*K) by
+        definition, but it is computed TILED with cached norms, so the
+        working set beyond the result stays bounded."""
+        from .distances import pairwise_dists, row_norms_sq
+        centroids = jnp.asarray(self._fitted().centroids, jnp.float32)
+        pts = jnp.asarray(points)
+        if pts.dtype != jnp.float32:
+            pts = pts.astype(jnp.float32)
+        c2 = row_norms_sq(centroids)
+        tile = 8192
+        out = [pairwise_dists(pts[lo:lo + tile], centroids, None, c2)
+               for lo in range(0, pts.shape[0], tile)]
+        return jax.device_get(jnp.concatenate(out, axis=0))
+
+    def score(self, points, sample_weight=None):
+        """Negative (weighted) inertia of ``points`` under the fitted
+        centroids — the sklearn convention (greater is better)."""
+        _, dists = self._assign(points)
+        d2 = dists * dists
+        if sample_weight is not None:
+            d2 = d2 * jnp.asarray(sample_weight, jnp.float32)
+        return -float(jnp.sum(d2))

@@ -66,10 +66,12 @@ def yinyang_compact(points, init_centroids, n_groups=None,
 
     it = 0
     for it in range(1, max_iters + 1):
-        centroids, c2, ub, lb, need, shift, tighten = _move_and_bounds(
+        mv = _move_and_bounds(
             points, x2, centroids, assignments, ub, lb, groups,
             k=k, n_groups=n_groups)
-        evals += float(tighten)
+        centroids, c2, ub, lb = mv.centroids, mv.c2, mv.ub, mv.lb
+        need, shift = mv.need, mv.shift
+        evals += float(mv.tightened)
         n_cand = int(jnp.sum(need))           # per-iteration host sync
         if n_cand > 0:
             cap = max(min_cap, 1 << (n_cand - 1).bit_length())

@@ -9,42 +9,50 @@ accumulate centroids centrally" pattern mapped onto ICI collectives
 assignment, reduce = the centroid psum). Filtering is per-shard local,
 so the work saving composes with parallelism.
 
+Both sharded fits are THIN WRAPPERS over the engine's pass core
+(:func:`repro.core.engine.fit_core` — the one candidate-pass loop
+implementation): this module contributes ONLY the ``shard_map`` specs,
+the psum :class:`~repro.core.engine.Reducer`, and the host-side shard
+padding. Exactness fixes in the core land in the local and distributed
+paths at once; there is no distributed copy of the iteration.
+
 Two per-shard realisations of the candidate pass:
 
 ``backend="compact"`` (default, :func:`make_fit_sharded_engine`)
-    The engine's capacity-bucketed two-level compaction, run INSIDE the
-    ``shard_map`` body: each shard carries its own bucket level through
-    the ``lax.while_loop`` and switches levels shard-locally over a
-    static capacity ladder (``engine.cap_ladders`` /
-    ``engine.ladder_candidate_pass``) with the tuned downshift
-    hysteresis — no host syncs anywhere in the sharded loop. The
-    convergence test rides on the psum'd centroid sums (every shard
-    sees the same drift, so the while conds agree), and the
-    ``EvalCount`` work counter is psum'd at the end.
+    The engine's capacity-bucketed two-level compaction
+    (``PassCore(backend="ladder")``): each shard carries its own bucket
+    level through the ``lax.while_loop`` and switches levels
+    shard-locally over a static capacity ladder (``engine.cap_ladders``
+    / ``engine.select_bucket``) with the tuned downshift hysteresis —
+    no host syncs anywhere in the sharded loop. The convergence test
+    rides on the psum'd centroid sums (every shard sees the same
+    drift, so the while conds agree), and the ``EvalCount`` work
+    counter is psum'd at the end.
 ``backend="dense"`` (:func:`make_fit_sharded`)
-    The legacy masked-dense pass over every shard point (exact, no
-    skipped FLOPs) — the oracle the compact path is tested against,
-    and the AOT-lowering target of the production-mesh dry-run.
-
-The per-shard iteration is built from the ENGINE's pieces
-(``engine.move_and_bounds`` with a psum reduction hook +
-``engine.ladder_candidate_pass`` / ``engine.dense_candidate_pass``) —
-one implementation of the filter math shared by the local and
-distributed paths, so exactness fixes land in both at once.
+    The masked-dense pass over every shard point
+    (``PassCore(backend="oracle")``, exact, no skipped FLOPs) — the
+    oracle the compact path is tested against, and the AOT-lowering
+    target of the production-mesh dry-run.
 
 Optional int8 compression of the psum payload (``compress=True``)
-applies to the (K, D) partial-sums tensor only (counts and scalars stay
-exact) — the gradient-compression analogue for the centroid sums.
+applies to the (K, D) partial-sums tensor only (counts, sample weights
+and scalars stay exact) — the gradient-compression analogue for the
+centroid sums, realised inside ``Reducer.sums``.
+
+``sample_weight``: per-point weights shard with their points and enter
+the psum'd sums/counts and the inertia through the core — every
+reduction payload is weighted with the SAME single implementation as
+the local fit.
 
 Uneven shard sizes are handled by padding to the shard lattice with
-sentinel rows (``assignment = K``, ``ub = 0``, ``lb = +inf``): the
-sentinel drops out of every ``segment_sum`` and the zero/inf bounds
-keep padded rows filtered forever, so they cost no candidate work and
-touch no statistics.
+sentinel rows (``assignment = K``, ``ub = 0``, ``lb = +inf``, weight 0
+when weighted): the sentinel drops out of every ``segment_sum`` and the
+zero/inf bounds keep padded rows filtered forever, so they cost no
+candidate work and touch no statistics.
 
 :func:`make_stream_bounds_sharded` / :func:`make_stream_update_sharded`
-are the sharded analogues of ``engine.stream_bounds`` /
-``engine.stream_update`` — one global mini-batch split over the mesh,
+are the sharded instantiations of ``engine.stream_bounds`` /
+``engine.stream_step`` — one global mini-batch split over the mesh,
 candidate pass per shard, psum'd batch sums/counts feeding the decayed
 EMA — driven by ``repro.streaming.StreamingKMeans(mesh=...)``.
 """
@@ -70,100 +78,58 @@ except ImportError:                      # jax >= 0.7
     _shard_map = jax.shard_map
     _SHARD_MAP_KW = {"check_vma": False}
 
-from .distances import row_norms_sq, rowwise_dists
-from .engine import (DEFAULT_CONFIG, EngineCarry, EngineConfig,
+from . import engine as _engine
+from .engine import (DEFAULT_CONFIG, EngineConfig, PassCore, Reducer,
                      StreamStepOut, build_group_tables, cap_ladders,
-                     compact_candidate_pass, dense_candidate_pass,
-                     ladder_candidate_pass, move_and_bounds, select_bucket,
-                     stream_bounds, stream_ema_and_decay, _init_carry)
-from .kmeans import (FilterState, KMeansResult, _init_filter_state,
-                     centroid_sums, group_centroids)
-
-
-def _psum_maybe_compressed(x: jnp.ndarray, axes, compress: bool):
-    if not compress:
-        return jax.lax.psum(x, axes)
-    # Error-feedback-free single-shot int8: scale by per-tensor absmax.
-    # Exact enough for centroid sums (relative error ~1/127) and the
-    # error is self-correcting across Lloyd iterations; tests check
-    # convergence to the same inertia ballpark.
-    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    deq = q.astype(jnp.float32) * scale
-    return jax.lax.psum(deq, axes)
+                     stream_bounds)
+from .kmeans import KMeansResult, group_centroids
 
 
 def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
                      max_iters: int, tol: float, compress: bool = False,
-                     opt_sq: bool = True, unroll_iters: int = 0):
-    """Build the jittable shard_map K-means fit (AOT-lowerable for the
-    production-mesh dry-run; executed by distributed_yinyang).
+                     opt_sq: bool = True, unroll_iters: int = 0,
+                     weighted: bool = False):
+    """Build the jittable shard_map K-means fit with the masked-dense
+    per-shard pass (AOT-lowerable for the production-mesh dry-run;
+    executed by distributed_yinyang). The body is
+    ``engine.fit_core(core=PassCore(backend="oracle", reducer=psum))``
+    — no loop code lives here.
 
-    opt_sq (default True, §Perf optimization): run the masked
+    ``opt_sq`` (default True, §Perf optimization): run the masked
     min/argmin pass on SQUARED distances (monotone, so results are
-    identical) and sqrt only the (N,) / (N,G) reduced outputs —
-    removes a full (N, K) sqrt pass and its HBM round-trip per
-    iteration.
+    identical) and sqrt only the reduced outputs. False exists for the
+    dry-run's A/B cost analysis only — every driver runs True.
+
+    ``weighted=True`` adds a per-point ``sample_weight`` argument,
+    sharded with the points.
 
     unroll_iters>0: replace the while_loop with exactly that many python
-    iterations — analysis artifacts only (XLA cost_analysis does not
-    descend into while bodies; the N-vs-(N-1) unrolled diff gives the
-    exact per-iteration cost)."""
+    iterations of the SAME body — analysis artifacts only (XLA
+    cost_analysis does not descend into while bodies; the N-vs-(N-1)
+    unrolled diff gives the exact per-iteration cost)."""
     axes = tuple(axes)
     pspec = P(axes, None)
+    core = PassCore(backend="oracle", k=k, n_groups=n_groups,
+                    opt_sq=opt_sq,
+                    reducer=Reducer(axes=axes, compress=compress))
+    out_specs = (P(None, None), P(axes), P(), P(), P())
 
-    def reduce_sums(sums, counts):
-        return (_psum_maybe_compressed(sums, axes, compress),
-                jax.lax.psum(counts, axes))
+    in_specs = (pspec, P(None, None)) + ((P(axes),) if weighted else ())
 
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(pspec, P(None, None)),
-        out_specs=(P(None, None), P(axes), P(), P(), P()),
-        **_SHARD_MAP_KW,
-    )
-    def fit_sharded(local_points, init_c):
+    @functools.partial(_shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, **_SHARD_MAP_KW)
+    def fit_sharded(local_points, init_c, *rest):
+        weights = rest[0] if weighted else None
         groups = group_centroids(init_c, n_groups)
-
-        # shard-local ||x||^2, computed ONCE per fit and closed over by
-        # the loop body; ||c||^2 flows move -> candidate pass per
-        # iteration (both passes run in the same body here)
-        x2 = row_norms_sq(local_points)
-
-        # replicated init assignment pass (local points only)
-        state0 = _init_filter_state(local_points, init_c, groups, n_groups,
-                                    x2=x2)
-
-        def cond(state):
-            return jnp.logical_and(state.iteration < max_iters,
-                                   state.shift > tol)
-
-        def body(state: FilterState):
-            new_c, c2, ub_t, lb_dec, need, shift, tightened = \
-                move_and_bounds(
-                    local_points, state.centroids, state.assignments,
-                    state.ub, state.lb, groups, k=k, n_groups=n_groups,
-                    reduce_sums=reduce_sums, x2=x2)
-            new_assign, new_ub, new_lb, pairs = dense_candidate_pass(
-                local_points, new_c, state.assignments, ub_t, lb_dec,
-                groups, need, n_groups=n_groups, opt_sq=opt_sq, x2=x2,
-                c2=c2)
-            return FilterState(state.iteration + 1, new_c, new_assign,
-                               new_ub, new_lb, shift,
-                               state.distance_evals.add(tightened)
-                               .add(pairs))
-
+        dummy_members = jnp.full((n_groups, 1), -1, jnp.int32)
+        dummy_gsize = jnp.zeros((n_groups,), jnp.float32)
         if unroll_iters > 0:
-            state = state0
-            for _ in range(unroll_iters):
-                state = body(state)
-        else:
-            state = jax.lax.while_loop(cond, body, state0)
-        d = rowwise_dists(local_points, state.centroids[state.assignments])
-        inertia = jax.lax.psum(jnp.sum(d * d), axes)
-        evals = jax.lax.psum(state.distance_evals.total(), axes)
-        return (state.centroids, state.assignments, state.iteration,
-                evals, inertia)
+            return _engine.fit_core_unrolled(
+                local_points, init_c, groups, dummy_members, dummy_gsize,
+                core=core, n_iters=unroll_iters, weights=weights)
+        return _engine.fit_core(
+            local_points, init_c, groups, dummy_members, dummy_gsize,
+            core=core, max_iters=max_iters, tol=tol, weights=weights)
 
     return fit_sharded
 
@@ -172,11 +138,12 @@ def make_fit_sharded_engine(mesh: Mesh, axes, k: int, n_groups: int,
                             max_iters: int, tol: float, *, shard_n: int,
                             compress: bool = False,
                             config: EngineConfig | None = None,
-                            max_branches: int = 12):
+                            max_branches: int = 12,
+                            weighted: bool = False):
     """Build the compact (capacity-bucketed) sharded fit.
 
-    Returns a shard_map'd ``fit(local_points, valid, init_c, groups,
-    members, gsize) -> (centroids, assignments, n_iters, evals,
+    Returns a shard_map'd ``fit(local_points, valid[, weights], init_c,
+    groups, members, gsize) -> (centroids, assignments, n_iters, evals,
     inertia)`` where ``valid`` masks sentinel padding rows (see module
     docstring), ``groups`` is the (K,) centroid->group map and
     ``members``/``gsize`` the host-built group tables
@@ -184,101 +151,41 @@ def make_fit_sharded_engine(mesh: Mesh, axes, k: int, n_groups: int,
     so the per-point group buckets use the true ``Lmax``, not the K
     upper bound).
 
-    The body is the engine's split-loop construction (pending candidate
-    pass at the top of each iteration, one epilogue pass after the
-    loop) with the bucket machinery fully in-trace: each shard carries
-    ``(level_n, level_g)`` through the while_loop, runs
-    ``ladder_candidate_pass`` at its level, and transitions via
-    ``select_bucket`` using its OWN candidate count / group high-water
-    — per-shard work-proportional capacities with zero host round
-    trips. ``cfg.min_cap`` floors the ladder; ``cfg.down_n``/``down_g``
-    set the downshift hysteresis; ``cfg.chunk`` and
-    ``cfg.group_gather_factor`` pick each branch's gather-vs-GEMM
-    crossover; ``cfg.refresh_in_pass`` places the own-distance refresh
-    (full-shard rowwise vs on the compacted survivor buffer).
+    The body is ``engine.fit_core`` at a ``PassCore(backend="ladder",
+    reducer=psum)``: the engine's split-loop construction with the
+    bucket machinery fully in-trace — each shard carries
+    ``(level_n, level_g)`` through the while_loop and transitions via
+    ``engine.select_bucket`` using its OWN candidate count / group
+    high-water — per-shard work-proportional capacities with zero host
+    round trips. ``cfg.min_cap`` floors the ladder;
+    ``cfg.down_n``/``down_g`` set the downshift hysteresis;
+    ``cfg.chunk`` and ``cfg.group_gather_factor`` pick each branch's
+    gather-vs-GEMM crossover; ``cfg.refresh_in_pass`` places the
+    own-distance refresh (full-shard rowwise vs on the compacted
+    survivor buffer).
     """
     axes = tuple(axes)
     cfg = config or DEFAULT_CONFIG
     cap_ns, cap_gs = cap_ladders(shard_n, n_groups, min_cap=cfg.min_cap,
                                  max_branches=max_branches)
+    core = PassCore.from_config(
+        cfg, backend="ladder", k=k, n_groups=n_groups,
+        reducer=Reducer(axes=axes, compress=compress),
+        cap_ns=cap_ns, cap_gs=cap_gs)
     pspec = P(axes, None)
+    out_specs = (P(None, None), P(axes), P(), P(), P())
 
-    def reduce_sums(sums, counts):
-        return (_psum_maybe_compressed(sums, axes, compress),
-                jax.lax.psum(counts, axes))
+    in_specs = (pspec, P(axes)) + ((P(axes),) if weighted else ()) + \
+        (P(None, None), P(None), P(None, None), P(None))
 
-    refresh = not cfg.refresh_in_pass
-
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(pspec, P(axes), P(None, None), P(None), P(None, None),
-                  P(None)),
-        out_specs=(P(None, None), P(axes), P(), P(), P()),
-        **_SHARD_MAP_KW,
-    )
-    def fit_sharded(local_points, valid, init_c, groups, members, gsize):
-        carry0 = _init_carry(local_points, init_c, groups,
-                             n_groups=n_groups)
-        # sentinel-mask the padding rows: assignment K drops out of
-        # every segment_sum; ub=0 / lb=inf keeps them filtered forever.
-        # Their K initial distance rows never ran semantically — take
-        # them back out of the eval count.
-        pad = jnp.sum(1.0 - valid.astype(jnp.float32))
-        carry0 = carry0._replace(
-            assignments=jnp.where(valid, carry0.assignments, k),
-            ub=jnp.where(valid, carry0.ub, 0.0),
-            lb=jnp.where(valid[:, None], carry0.lb, jnp.inf),
-            evals=carry0.evals.add(-pad * k))
-
-        def candidate(carry, ln, lg):
-            return ladder_candidate_pass(
-                local_points, carry.centroids, carry.assignments,
-                carry.ub, carry.lb, groups, members, gsize, carry.need,
-                ln, lg, cap_ns=cap_ns, cap_gs=cap_gs, n_groups=n_groups,
-                chunk=cfg.chunk,
-                group_gather_factor=cfg.group_gather_factor,
-                x2=carry.x2, c2=carry.c2,
-                refresh_ub=cfg.refresh_in_pass)
-
-        def cond(state):
-            carry, _, _ = state
-            # the centroid sums are psum'd, so shift is replicated:
-            # every shard's cond agrees and the collectives stay in
-            # lockstep even when shards sit in different buckets
-            return jnp.logical_and(carry.iteration < max_iters,
-                                   carry.shift > tol)
-
-        def body(state):
-            carry, ln, lg = state
-            new_as, new_ub, new_lb, pairs, gmax = candidate(carry, ln, lg)
-            new_c, new_c2, ub_t, lb_dec, need, shift, tightened = \
-                move_and_bounds(local_points, carry.centroids, new_as,
-                                new_ub, new_lb, groups, k=k,
-                                n_groups=n_groups,
-                                reduce_sums=reduce_sums, x2=carry.x2,
-                                refresh=refresh)
-            n_cand = jnp.sum(need.astype(jnp.int32))
-            carry = EngineCarry(carry.iteration + 1, new_c, new_c2,
-                                new_as, ub_t, lb_dec, carry.x2, need,
-                                n_cand, gmax, shift,
-                                carry.evals.add(pairs).add(tightened))
-            ln, lg = select_bucket(n_cand, gmax, ln, lg, cap_ns=cap_ns,
-                                   cap_gs=cap_gs, down_n=cfg.down_n,
-                                   down_g=cfg.down_g)
-            return carry, ln, lg
-
-        state0 = (carry0, jnp.int32(0), jnp.int32(0))
-        carry, ln, lg = jax.lax.while_loop(cond, body, state0)
-
-        # epilogue: the final pending candidate pass + masked inertia
-        new_as, _, _, pairs, _ = candidate(carry, ln, lg)
-        evals = carry.evals.add(pairs)
-        own = carry.centroids[jnp.minimum(new_as, k - 1)]
-        d = rowwise_dists(local_points, own)
-        inertia = jax.lax.psum(
-            jnp.sum(jnp.where(valid, d * d, 0.0)), axes)
-        total = jax.lax.psum(evals.total(), axes)
-        return (carry.centroids, new_as, carry.iteration, total, inertia)
+    @functools.partial(_shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, **_SHARD_MAP_KW)
+    def fit_sharded(local_points, valid, *rest):
+        weights, rest = (rest[0], rest[1:]) if weighted else (None, rest)
+        init_c, groups, members, gsize = rest
+        return _engine.fit_core(
+            local_points, init_c, groups, members, gsize, core=core,
+            max_iters=max_iters, tol=tol, weights=weights, valid=valid)
 
     return fit_sharded
 
@@ -293,17 +200,18 @@ def _mesh_shards(mesh: Mesh, axes) -> int:
 # pass instance per bucket level — seconds of XLA time on CPU).
 @functools.lru_cache(maxsize=64)
 def _jitted_fit_dense(mesh: Mesh, axes, k, n_groups, max_iters, tol,
-                      compress):
+                      compress, weighted):
     return jax.jit(make_fit_sharded(mesh, axes, k, n_groups, max_iters,
-                                    tol, compress))
+                                    tol, compress, weighted=weighted))
 
 
 @functools.lru_cache(maxsize=64)
 def _jitted_fit_engine(mesh: Mesh, axes, k, n_groups, max_iters, tol,
-                       shard_n, compress, config, max_branches):
+                       shard_n, compress, config, max_branches, weighted):
     return jax.jit(make_fit_sharded_engine(
         mesh, axes, k, n_groups, max_iters, tol, shard_n=shard_n,
-        compress=compress, config=config, max_branches=max_branches))
+        compress=compress, config=config, max_branches=max_branches,
+        weighted=weighted))
 
 
 def _pad_sharded(arr_np: np.ndarray, shards: int):
@@ -318,29 +226,6 @@ def _pad_sharded(arr_np: np.ndarray, shards: int):
     return arr_np, valid
 
 
-def _sharded_config(shard_n: int, k: int, d: int, shards: int,
-                    config: EngineConfig | None,
-                    tune: str) -> EngineConfig:
-    """Resolve the per-shard engine configuration: explicit ``config``
-    wins; otherwise consult the tuning cache under the shard-count
-    signature (``repro.tune.signature(..., shards=)``), falling back to
-    the single-device signature of the per-shard problem, then to the
-    defaults. The tuned ``backend`` field is ignored here — the sharded
-    body realises its own pass; ``"force"`` degrades to ``"auto"`` (the
-    built-in measured search times single-device fits — tune the
-    sharded key explicitly with ``repro.tune.autotune(shards=...)`` and
-    a sharded measure hook)."""
-    if config is not None:
-        return config
-    if tune == "off":
-        return DEFAULT_CONFIG
-    from .. import tune as _tune
-    cfg = _tune.lookup(n=shard_n, k=k, d=d, shards=shards)
-    if cfg is None:
-        cfg = _tune.lookup(n=shard_n, k=k, d=d)
-    return cfg or DEFAULT_CONFIG
-
-
 def distributed_yinyang(points, init_centroids, mesh: Mesh,
                         axes: Sequence[str] = ("data",),
                         n_groups: int | None = None,
@@ -348,16 +233,24 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
                         compress: bool = False, backend: str = "compact",
                         config: EngineConfig | None = None,
                         tune: str = "auto",
-                        max_branches: int = 12) -> KMeansResult:
+                        max_branches: int = 12,
+                        sample_weight=None) -> KMeansResult:
     """Run filtered K-means with points sharded over ``axes`` of ``mesh``.
 
     ``backend="compact"`` (default) runs the engine's two-level
     capacity-bucketed compaction per shard (see
-    :func:`make_fit_sharded_engine`); ``"dense"`` keeps the legacy
-    masked-dense per-shard pass (exact oracle; requires N divisible by
-    the shard count). ``tune`` consults the per-(platform, N, K, D,
-    shards) tuning cache for the compact body's capacities/crossovers;
+    :func:`make_fit_sharded_engine`); ``"dense"`` keeps the masked-dense
+    per-shard pass (exact oracle; requires N divisible by the shard
+    count). Both are instantiations of the SAME
+    :func:`repro.core.engine.fit_core`. ``tune`` consults the
+    per-(platform, N, K, D, shards) tuning cache for the compact body's
+    capacities/crossovers (``"force"`` runs the measured sharded search
+    on a miss — see :func:`repro.tune.autotune` ``shards=``);
     ``config`` pins them explicitly.
+
+    ``sample_weight``: optional (N,) per-point weights, sharded with
+    their points (weighted psum'd sums/counts + weighted inertia; the
+    int8 ``compress`` payload stays the (K, D) sums only).
 
     ``points`` may be a host array (it is sharded — and, on the compact
     path, padded to the shard lattice — on entry) or an already-sharded
@@ -376,6 +269,13 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
     axes = tuple(axes)
     shards = _mesh_shards(mesh, axes)
     init_c = jnp.asarray(init_centroids, jnp.float32)
+    weighted = sample_weight is not None
+    w_np = None if sample_weight is None else \
+        np.asarray(jax.device_get(sample_weight), np.float32)
+
+    shard = NamedSharding(mesh, P(axes, None))
+    shard1 = NamedSharding(mesh, P(axes))
+    repl = NamedSharding(mesh, P())
 
     if backend == "dense":
         n = points.shape[0]
@@ -386,10 +286,14 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
                 f"shards")
         fit_sharded = _jitted_fit_dense(mesh, axes, k, n_groups,
                                         int(max_iters), float(tol),
-                                        bool(compress))
-        points = jax.device_put(points, NamedSharding(mesh, P(axes, None)))
-        init_d = jax.device_put(init_c, NamedSharding(mesh, P()))
-        c, a, i, evals, inertia = fit_sharded(points, init_d)
+                                        bool(compress), weighted)
+        points = jax.device_put(points, shard)
+        init_d = jax.device_put(init_c, repl)
+        args = (points, init_d)
+        if weighted:
+            args = (points, init_d,
+                    jax.device_put(jnp.asarray(w_np), shard1))
+        c, a, i, evals, inertia = fit_sharded(*args)
         return KMeansResult(c, a, i, evals, inertia)
 
     n, d = points.shape
@@ -397,13 +301,18 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
         # uneven: materialise on host once to append the sentinel rows
         pts_in, valid_np = _pad_sharded(
             np.asarray(jax.device_get(points), np.float32), shards)
+        if weighted:
+            w_np, _ = _pad_sharded(w_np, shards)   # pad rows: weight 0
     else:
         # no padding needed: device-resident arrays stay on device
         # (jnp.asarray is a no-op for committed f32 arrays)
         pts_in = jnp.asarray(points, jnp.float32)
         valid_np = np.ones((n,), bool)
     shard_n = len(pts_in) // shards
-    cfg = _sharded_config(shard_n, k, d, shards, config, tune)
+    cfg = _resolve_sharded_config(
+        points, init_c, mesh, axes, shard_n=shard_n, k=k, d=d,
+        shards=shards, config=config, tune=tune, n_groups=n_groups,
+        max_iters=int(max_iters), tol=float(tol))
 
     # group map + tables, built once on the host (true Lmax)
     groups = group_centroids(init_c, n_groups)
@@ -412,17 +321,40 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
 
     fit_sharded = _jitted_fit_engine(
         mesh, axes, k, n_groups, int(max_iters), float(tol), shard_n,
-        bool(compress), cfg, int(max_branches))
-    shard = NamedSharding(mesh, P(axes, None))
-    repl = NamedSharding(mesh, P())
-    args = (jax.device_put(pts_in, shard),
-            jax.device_put(valid_np, NamedSharding(mesh, P(axes))),
-            jax.device_put(init_c, repl),
-            jax.device_put(groups, repl),
-            jax.device_put(members, repl),
-            jax.device_put(gsize, repl))
+        bool(compress), cfg, int(max_branches), weighted)
+    args = [jax.device_put(pts_in, shard),
+            jax.device_put(valid_np, shard1)]
+    if weighted:
+        args.append(jax.device_put(jnp.asarray(w_np), shard1))
+    args += [jax.device_put(init_c, repl),
+             jax.device_put(groups, repl),
+             jax.device_put(members, repl),
+             jax.device_put(gsize, repl)]
     c, a, i, evals, inertia = fit_sharded(*args)
     return KMeansResult(c, a[:n], i, evals, inertia)
+
+
+def _resolve_sharded_config(points, init_c, mesh, axes, *, shard_n, k, d,
+                            shards, config, tune, n_groups, max_iters,
+                            tol) -> EngineConfig:
+    """Config precedence for the compact sharded fit: explicit
+    ``config`` > tuned ``...|sS`` cache entry > (``tune="force"`` only)
+    a fresh measured sharded search over THIS mesh > the single-device
+    entry for the per-shard shape > defaults."""
+    if config is not None:
+        return config
+    if tune == "off":
+        return DEFAULT_CONFIG
+    from .. import tune as _tune
+    cfg = _tune.lookup(n=shard_n, k=k, d=d, shards=shards)
+    if cfg is None and tune == "force":
+        cfg = _tune.autotune(
+            jnp.asarray(points, jnp.float32)[:shard_n], init_c,
+            n_groups=n_groups, max_iters=max_iters, tol=tol,
+            shards=shards, mesh=mesh, axes=axes)
+    if cfg is None:
+        cfg = _tune.lookup(n=shard_n, k=k, d=d)
+    return cfg or DEFAULT_CONFIG
 
 
 # --------------------------------------------------------------------------
@@ -457,49 +389,41 @@ def make_stream_bounds_sharded(mesh: Mesh, axes: Sequence[str] = ("data",)):
 def make_stream_update_sharded(mesh: Mesh, axes, *, k: int, n_groups: int,
                                cap_n: int, cap_g: int, chunk: int = 2048,
                                group_gather_factor: int = 4,
-                               compress: bool = False):
-    """Sharded analogue of ``engine.stream_update``: one global
-    mini-batch split over the mesh, the engine's compacted candidate
-    pass per shard (``cap_n`` must cover the max PER-SHARD candidate
-    count — the caller syncs it via :func:`make_stream_bounds_sharded`),
-    then the psum'd batch sums/counts feed the decayed count-weighted
-    centroid EMA, computed replicated so every shard agrees. Returns a
-    jitted function with the same :class:`~repro.core.engine.
-    StreamStepOut` result; ``assignments``/``ub``/``lb`` come back
-    sharded along ``axes`` (gathered to the global batch on read).
-    ``compress=True`` int8-compresses the (K, D) partial-sums psum
-    payload only."""
+                               compress: bool = False,
+                               weighted: bool = False):
+    """Sharded instantiation of ``engine.stream_step``: one global
+    mini-batch split over the mesh, the SAME step body per shard with a
+    psum :class:`~repro.core.engine.Reducer` — the reduced batch
+    sums/counts make the decayed EMA (and drift) replicated, and the
+    scalar telemetry is psum'd/pmax'd by the reducer inside the step.
+    ``cap_n`` must cover the max PER-SHARD candidate count (the caller
+    syncs it via :func:`make_stream_bounds_sharded`). Returns a jitted
+    function with the :class:`~repro.core.engine.StreamStepOut` result;
+    ``assignments``/``ub``/``lb`` come back sharded along ``axes``
+    (gathered to the global batch on read). ``compress=True``
+    int8-compresses the (K, D) partial-sums psum payload only.
+    ``weighted=True`` adds a sharded per-point ``weights`` argument."""
     axes = tuple(axes)
-
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(P(axes, None), P(None, None), P(None), P(), P(None),
+    core = PassCore(backend="compact", k=k, n_groups=n_groups,
+                    cap_n=cap_n, cap_g=cap_g, chunk=chunk,
+                    group_gather_factor=group_gather_factor,
+                    reducer=Reducer(axes=axes, compress=compress))
+    out_specs = StreamStepOut(
+        P(None, None), P(None), P(axes), P(axes), P(axes, None),
+        P(), P(), P(None), P(None), P(None), P())
+    base_specs = (P(axes, None), P(None, None), P(None), P(), P(None),
                   P(None, None), P(None), P(axes), P(axes), P(axes, None),
-                  P(axes)),
-        out_specs=StreamStepOut(
-            P(None, None), P(None), P(axes), P(axes), P(axes, None),
-            P(), P(), P(None), P(None), P(None), P()),
-        **_SHARD_MAP_KW,
-    )
-    def update(points, centroids, counts, decay, groups, members, gsize,
-               assignments, ub_t, lb, need):
-        x2 = row_norms_sq(points)
-        c2 = row_norms_sq(centroids)
-        new_as, nub, nlb, pairs, gmax = compact_candidate_pass(
-            points, centroids, assignments, ub_t, lb, groups, members,
-            gsize, need, cap_n=cap_n, cap_g=cap_g, n_groups=n_groups,
-            chunk=chunk, opt_sq=True, x2=x2, c2=c2,
-            group_gather_factor=group_gather_factor)
-        bsums, bcounts = centroid_sums(points, new_as, k)
-        bsums = _psum_maybe_compressed(bsums, axes, compress)
-        bcounts = jax.lax.psum(bcounts, axes)
-        # the reduced sums/counts make the EMA (and drift) replicated;
-        # only the per-shard scalars still need reducing afterwards
-        out = stream_ema_and_decay(
-            centroids, counts, decay, bsums, bcounts, new_as, nub, nlb,
-            jax.lax.psum(pairs, axes), jax.lax.pmax(gmax, axes), groups,
-            n_groups=n_groups)
-        return out._replace(
-            batch_cost=jax.lax.psum(out.batch_cost, axes))
+                  P(axes))
+
+    in_specs = base_specs + ((P(axes),) if weighted else ())
+
+    @functools.partial(_shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, **_SHARD_MAP_KW)
+    def update(points, centroids, counts, decay, groups, members,
+               gsize, assignments, ub_t, lb, need, *rest):
+        weights = rest[0] if weighted else None
+        return _engine.stream_step(
+            points, centroids, counts, decay, groups, members, gsize,
+            assignments, ub_t, lb, need, weights, core=core)
 
     return jax.jit(update)

@@ -1,9 +1,32 @@
 """Device-resident filtered K-means execution engine.
 
-This is the single executor behind the KPynq filter family, replacing
-the three divergent drivers (masked-dense oracle, host-synced compact
-driver, ad-hoc kernel glue) with one iteration loop that realises BOTH
-filter levels as skipped work:
+This is the single executor behind the KPynq filter family — ONE pass
+core, three drivers. The layering (see ``docs/architecture.md``):
+
+* :class:`PassCore` — the candidate-pass dispatch (oracle / compact /
+  ladder / pallas) plus the :func:`move_and_bounds` epilogue, the only
+  copy of the filtered iteration (``_loop_body`` is the only
+  candidate-pass loop body in the repo);
+* :class:`Reducer` — the collective axis: identity locally,
+  psum/pmax over mesh axes inside ``shard_map`` (with optional int8
+  compression of the (K, D) partial-sums payload only);
+* the centroid-update strategies — :data:`CONVERGENCE_UPDATE` (batch
+  mean + tol-on-drift convergence) vs :data:`EMA_UPDATE` (the
+  streaming decayed count-weighted EMA);
+* ``sample_weight`` threads through :func:`centroid_sums`, the
+  inertia, and the EMA's effective counts in this one place, so every
+  backend x every driver is weighted by the same implementation
+  (weights never touch bounds or filters — work saving is unchanged,
+  and ``None``/uniform-1.0 weights are bit-identical).
+
+The three drivers are thin instantiations: :func:`fit` (this module) =
+PassCore + local reducer + convergence, host-picked capacity buckets;
+``repro.core.distributed.distributed_yinyang`` = the same
+:func:`fit_core` inside ``shard_map`` + psum reducer + the in-trace
+capacity ladder; ``repro.streaming.StreamingKMeans`` =
+:func:`stream_step` = one PassCore pass + (local|psum) reducer + EMA.
+
+The iteration loop realises BOTH filter levels as skipped work:
 
 * the whole fit runs under ``lax.while_loop`` — zero host round-trips
   per iteration. The only host syncs are capacity-bucket transitions
@@ -105,8 +128,9 @@ AUTO_LLOYD_MAX_WORK = 1 << 17
 # function would re-trace its while_loop on every fit, costing more
 # than the fit itself at these sizes
 _lloyd_jit = functools.partial(jax.jit, static_argnames=(
-    "max_iters", "tol"))(lambda points, init_c, *, max_iters, tol:
-                         lloyd(points, init_c, max_iters, tol))
+    "max_iters", "tol"))(lambda points, init_c, weights, *, max_iters,
+                         tol: lloyd(points, init_c, max_iters, tol,
+                                    weights=weights))
 
 
 # --------------------------------------------------------------------------
@@ -185,46 +209,174 @@ def use_groups_decision(*, cap_n: int, cap_g: int, l_max: int, k: int,
 
 
 # --------------------------------------------------------------------------
+# the pass core's two strategy axes: Reducer (which collective) and
+# the centroid-update rule (which epilogue)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Reducer:
+    """Collective parameterisation of the pass core.
+
+    The ONLY thing that differs between the single-device fit and the
+    ``shard_map`` fit is which reduction joins the per-shard centroid
+    partial sums (and the scalar telemetry): identity locally,
+    ``lax.psum``/``pmax`` over the mesh axes in the distributed
+    drivers. Frozen + hashable so a Reducer can ride in a jit-static
+    :class:`PassCore`.
+
+    ``compress=True`` int8-compresses the (K, D) partial-sums payload
+    ONLY (:meth:`sums`); counts, weights and scalars always reduce
+    exactly (:meth:`add` / :meth:`max`).
+    """
+    axes: tuple = ()               # () = local (identity reductions)
+    compress: bool = False
+
+    @property
+    def is_local(self) -> bool:
+        return not self.axes
+
+    def sums(self, x):
+        """Reduce the (K, D) centroid partial sums — the one payload
+        eligible for int8 compression (error-feedback-free single-shot
+        absmax scaling; relative error ~1/127, self-correcting across
+        iterations)."""
+        if not self.axes:
+            return x
+        if not self.compress:
+            return jax.lax.psum(x, self.axes)
+        scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return jax.lax.psum(q.astype(jnp.float32) * scale, self.axes)
+
+    def add(self, x):
+        """Exact sum reduction (counts, eval counters, inertia)."""
+        return x if not self.axes else jax.lax.psum(x, self.axes)
+
+    def max(self, x):
+        """Max reduction (candidate counts, group high-waters)."""
+        return x if not self.axes else jax.lax.pmax(x, self.axes)
+
+
+LOCAL_REDUCER = Reducer()
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvergenceUpdate:
+    """Batch-fit centroid rule: mean of the reduced weighted sums,
+    empty clusters keep their previous centroid. Paired with the
+    tol-on-drift convergence test of the fit loops. ``clamp_gdrift``
+    stays False: an empty Yinyang group's ``segment_max`` drift is
+    ``-inf``, which the batch bound decay deliberately turns into a
+    vacuous (+inf) lower bound."""
+    clamp_gdrift: bool = False
+
+    def apply(self, sums, counts, centroids, carry_counts, decay):
+        return centroids_from_sums(sums, counts, centroids), counts
+
+
+@dataclasses.dataclass(frozen=True)
+class EMAUpdate:
+    """Streaming centroid rule: the decayed count-weighted EMA
+    ``c <- (decay * n_c * c + sum_batch) / (decay * n_c + b_c)`` —
+    ``decay=1`` is pure count-weighting (per-centroid 1/n learning
+    rate), ``decay<1`` caps the memory at ~1/(1-decay) batches. THE
+    single copy of the update rule, shared by the local and sharded
+    streaming steps. ``clamp_gdrift=True``: an empty group's -inf
+    drift would otherwise poison the caller's cumulative drift ledger
+    (inf - inf = NaN on the next inflation)."""
+    clamp_gdrift: bool = True
+
+    def apply(self, sums, counts, centroids, carry_counts, decay):
+        dec = carry_counts * decay
+        new_counts = dec + counts
+        tot = dec[:, None] * centroids + sums
+        # fractional decayed counts: guard with an epsilon, not the
+        # batch fit's max(counts, 1) (which assumes integer counts)
+        new_c = jnp.where(new_counts[:, None] > 1e-6,
+                          tot / jnp.maximum(new_counts, 1e-6)[:, None],
+                          centroids)
+        return new_c, new_counts
+
+
+CONVERGENCE_UPDATE = ConvergenceUpdate()
+EMA_UPDATE = EMAUpdate()
+
+
+class MoveOut(NamedTuple):
+    """Everything :func:`move_and_bounds` produces. Batch drivers read
+    ``centroids``/``c2``/``ub``/``lb``/``need``/``shift``/``tightened``;
+    the streaming step additionally reads ``counts`` (the carried
+    effective counts after the EMA), ``drift``/``gdrift`` (fed to the
+    host drift ledger) and ``batch_counts`` (this batch's per-centroid
+    weighted mass, pre-EMA)."""
+    centroids: jnp.ndarray     # (K, D) after the update rule
+    c2: jnp.ndarray            # (K,) ||centroids||^2, once per iteration
+    counts: jnp.ndarray        # (K,) rule-dependent carried counts
+    ub: jnp.ndarray            # (N,) drift-inflated (maybe refreshed)
+    lb: jnp.ndarray            # (N, G) drift-decayed
+    need: jnp.ndarray          # (N,) pending candidate mask
+    shift: jnp.ndarray         # f32 max centroid drift
+    tightened: jnp.ndarray     # f32 own-distance refreshes implied
+    drift: jnp.ndarray         # (K,) per-centroid drift this move
+    gdrift: jnp.ndarray        # (G,) per-group max drift this move
+    batch_counts: jnp.ndarray  # (K,) this pass's weighted mass
+
+
+# --------------------------------------------------------------------------
 # shared per-iteration pieces (also consumed by compact.py / distributed.py)
 # --------------------------------------------------------------------------
 
 def move_and_bounds(points, centroids, assignments, ub, lb, groups,
-                    *, k: int, n_groups: int, reduce_sums=None,
-                    x2=None, refresh: bool = True):
+                    *, k: int, n_groups: int,
+                    reducer: Reducer = LOCAL_REDUCER,
+                    update=CONVERGENCE_UPDATE, counts=None, decay=None,
+                    weights=None, x2=None, refresh: bool = True):
     """Centroid move + triangle-inequality bound maintenance + the
-    point-level filter. Pure traced function shared by every driver.
+    point-level filter — the pass core's move half, shared VERBATIM by
+    every driver (batch, sharded, streaming).
 
-    ``reduce_sums``: optional ``(sums, counts) -> (sums, counts)`` hook
-    applied to the per-shard centroid partial sums (``lax.psum`` in the
-    distributed fit; identity locally).
+    ``reducer``: which collective joins the per-shard centroid partial
+    sums (identity locally, psum over the mesh axes in the distributed
+    drivers — int8 compression applies to the (K, D) sums only).
+
+    ``update``: the centroid rule — :data:`CONVERGENCE_UPDATE` (batch
+    mean, tol-convergence drivers) or :data:`EMA_UPDATE` (decayed
+    count-weighted streaming EMA; needs ``counts``/``decay``).
+
+    ``weights``: optional (N,) per-point sample weights. They enter the
+    partial sums and counts ONLY — bounds and filter decisions are
+    weight-independent, and ``weights=None`` compiles the exact
+    pre-weight program (uniform weights of 1.0 are bit-identical to
+    it, since multiplying by 1.0f is exact).
 
     ``x2``: cached ``||x||^2`` row norms (computed once per fit by the
     callers); ``None`` falls back to the diff-form rowwise distance.
     The new centroids' ``||c||^2`` is computed here ONCE and returned
-    (``new_c2``) so the caller can share it with the following
+    (``MoveOut.c2``) so the caller can share it with the following
     candidate pass instead of recomputing it.
 
-    ``refresh=False`` (the compact backend) skips the own-distance
-    refresh entirely — the returned ``need`` is then the *maybe* mask
-    (``ub > glb`` on drift-inflated bounds) and the refresh happens on
-    the compacted survivor buffer inside
-    :func:`compact_candidate_pass` (``refresh_ub=True``), so the
-    full-N gather + rowwise pass disappears from the hot loop.
+    ``refresh=False`` (the compact backend's in-pass placement, and the
+    streaming step where the refresh belongs to the NEXT batch's
+    ``stream_bounds``) skips the own-distance refresh entirely — the
+    returned ``need`` is then the *maybe* mask (``ub > glb`` on
+    drift-inflated bounds) and the refresh happens on the compacted
+    survivor buffer inside :func:`compact_candidate_pass`
+    (``refresh_ub=True``), so the full-N gather + rowwise pass
+    disappears from the hot loop.
 
-    Returns ``(new_c, new_c2, ub_t, lb_dec, need, shift, n_tightened)``
-    where ``need`` marks points that must enter the candidate distance
-    pass and ``n_tightened`` counts the own-distance refreshes this
-    decision implies (performed here when ``refresh``, else by the
-    candidate pass).
+    Returns a :class:`MoveOut`.
     """
-    sums, counts = centroid_sums(points, assignments, k)
-    if reduce_sums is not None:
-        sums, counts = reduce_sums(sums, counts)
-    new_c = centroids_from_sums(sums, counts, centroids)
+    sums, bcounts = centroid_sums(points, assignments, k, weights=weights)
+    sums = reducer.sums(sums)
+    bcounts = reducer.add(bcounts)
+    new_c, new_counts = update.apply(sums, bcounts, centroids, counts,
+                                     decay)
     new_c2 = row_norms_sq(new_c)                       # once per iteration
 
     drift = jnp.linalg.norm(new_c - centroids, axis=-1)
     group_drift = jax.ops.segment_max(drift, groups, num_segments=n_groups)
+    if update.clamp_gdrift:
+        group_drift = jnp.maximum(group_drift, 0.0)
     shift = jnp.max(drift)
     ub = ub + drift[assignments]
     lb_dec = jnp.maximum(lb - group_drift[None, :], 0.0)
@@ -243,8 +395,9 @@ def move_and_bounds(points, centroids, assignments, ub, lb, groups,
     else:
         ub_t = ub
         need = maybe
-    return new_c, new_c2, ub_t, lb_dec, need, shift, jnp.sum(
-        maybe.astype(jnp.float32))
+    return MoveOut(new_c, new_c2, new_counts, ub_t, lb_dec, need, shift,
+                   jnp.sum(maybe.astype(jnp.float32)), drift, group_drift,
+                   bcounts)
 
 
 def dense_candidate_pass(points, new_c, assignments, ub_t, lb, groups, need,
@@ -662,55 +815,148 @@ class EngineStats:
     config: dict = dataclasses.field(default_factory=dict)
 
 
-def _candidate_pass(backend, points, carry, groups, members, gsize, *,
-                    n_groups, cap_n, cap_g, chunk, tile_n, interpret,
-                    use_groups, group_gather_factor,
-                    refresh_in_pass=False):
-    """Backend dispatch, normalised to (assign, ub, lb, pairs, gmax)."""
-    if backend == "oracle":
-        out = dense_candidate_pass(
-            points, carry.centroids, carry.assignments, carry.ub, carry.lb,
-            groups, carry.need, n_groups=n_groups, x2=carry.x2, c2=carry.c2)
-        return out + (jnp.int32(0),)
-    if backend == "pallas":
-        out = pallas_candidate_pass(
-            points, carry.centroids, carry.assignments, carry.ub, carry.lb,
-            groups, members, gsize, carry.need, n_groups=n_groups,
-            tile_n=tile_n, interpret=interpret, x2=carry.x2, c2=carry.c2)
-        return out + (jnp.int32(0),)
-    return compact_candidate_pass(
-        points, carry.centroids, carry.assignments, carry.ub, carry.lb,
-        groups, members, gsize, carry.need, cap_n=cap_n, cap_g=cap_g,
-        n_groups=n_groups, chunk=chunk, opt_sq=True, x2=carry.x2,
-        c2=carry.c2, refresh_ub=refresh_in_pass, use_groups=use_groups,
-        group_gather_factor=group_gather_factor)
+@dataclasses.dataclass(frozen=True)
+class PassCore:
+    """THE filtered-iteration core: one candidate-pass dispatch + one
+    move/bounds epilogue, parameterised by a :class:`Reducer` — the
+    single implementation behind ``engine.fit`` (local reducer,
+    host-picked buckets), ``repro.core.distributed`` (psum reducer,
+    in-trace capacity ladder) and ``repro.streaming`` (single step +
+    EMA epilogue).
+
+    ``backend``: the candidate-pass realisation — ``"oracle"``
+    (masked dense), ``"compact"`` (two-level compaction at the static
+    ``cap_n``/``cap_g``), ``"ladder"`` (compaction switched over the
+    static ``cap_ns`` x ``cap_gs`` lattice with ``lax.switch`` —
+    what a ``shard_map`` body runs, where a host bucket pick is not an
+    option) or ``"pallas"`` (group-granular block-skip kernel).
+
+    Frozen/hashable so a core is a jit-static argument: every field is
+    a shape/dispatch choice, none affects the fixed point.
+    """
+    backend: str
+    k: int
+    n_groups: int
+    reducer: Reducer = LOCAL_REDUCER
+    cap_n: int = 0                 # static caps (compact backend)
+    cap_g: int = 0
+    cap_ns: tuple = ()             # capacity lattice (ladder backend)
+    cap_gs: tuple = ()
+    chunk: int = 2048
+    tile_n: int = 256
+    group_gather_factor: int = 4
+    down_n: int = 2
+    down_g: int = 4
+    refresh_in_pass: bool = False
+    use_groups: bool | None = None
+    interpret: bool = False
+    # opt_sq=False exists for analysis artifacts only (the dry-run's
+    # A/B of the squared-distance reductions); every driver runs True
+    opt_sq: bool = True
+
+    @classmethod
+    def from_config(cls, cfg: EngineConfig, *, backend: str, k: int,
+                    n_groups: int, **kw) -> "PassCore":
+        """Lift the tuned knobs of an :class:`EngineConfig` into a
+        core; ``kw`` pins the per-driver fields (caps/ladder/reducer)."""
+        return cls(backend=backend, k=k, n_groups=n_groups,
+                   chunk=cfg.chunk, tile_n=cfg.tile_n,
+                   group_gather_factor=cfg.group_gather_factor,
+                   down_n=cfg.down_n, down_g=cfg.down_g,
+                   refresh_in_pass=cfg.refresh_in_pass, **kw)
+
+    @property
+    def refresh_in_move(self) -> bool:
+        """Where the own-distance refresh runs: in
+        :func:`move_and_bounds` (full-N rowwise) unless the compacting
+        backends place it on the survivor buffer."""
+        return not (self.backend in ("compact", "ladder")
+                    and self.refresh_in_pass)
+
+    def candidate_pass(self, points, centroids, assignments, ub, lb, need,
+                       groups, members, gsize, *, x2, c2,
+                       level_n=None, level_g=None):
+        """Backend dispatch, normalised to
+        ``(assign, ub, lb, pairs, gmax)``."""
+        if self.backend == "oracle":
+            out = dense_candidate_pass(
+                points, centroids, assignments, ub, lb, groups, need,
+                n_groups=self.n_groups, opt_sq=self.opt_sq, x2=x2, c2=c2)
+            return out + (jnp.int32(0),)
+        if self.backend == "pallas":
+            out = pallas_candidate_pass(
+                points, centroids, assignments, ub, lb, groups, members,
+                gsize, need, n_groups=self.n_groups, tile_n=self.tile_n,
+                interpret=self.interpret, x2=x2, c2=c2)
+            return out + (jnp.int32(0),)
+        if self.backend == "ladder":
+            return ladder_candidate_pass(
+                points, centroids, assignments, ub, lb, groups, members,
+                gsize, need, level_n, level_g, cap_ns=self.cap_ns,
+                cap_gs=self.cap_gs, n_groups=self.n_groups,
+                chunk=self.chunk,
+                group_gather_factor=self.group_gather_factor, x2=x2,
+                c2=c2, refresh_ub=self.refresh_in_pass)
+        return compact_candidate_pass(
+            points, centroids, assignments, ub, lb, groups, members,
+            gsize, need, cap_n=self.cap_n, cap_g=self.cap_g,
+            n_groups=self.n_groups, chunk=self.chunk,
+            opt_sq=self.opt_sq, x2=x2, c2=c2,
+            refresh_ub=self.refresh_in_pass, use_groups=self.use_groups,
+            group_gather_factor=self.group_gather_factor)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "backend", "k", "n_groups", "cap_n", "cap_g", "max_iters", "tol",
-    "min_cap", "allow_downshift", "chunk", "tile_n", "interpret",
-    "use_groups", "group_gather_factor", "down_n", "down_g",
-    "refresh_in_pass"))
-def _run_loop(points, carry, groups, members, gsize, *, backend, k,
-              n_groups, cap_n, cap_g, max_iters, tol, min_cap,
-              allow_downshift, chunk, tile_n, interpret, use_groups=None,
-              group_gather_factor=4, down_n=2, down_g=4,
-              refresh_in_pass=False):
-    """One capacity bucket's worth of device-resident iterations.
+def _loop_body(core: PassCore, points, weights, groups, members, gsize):
+    """THE candidate-pass loop body (pending candidate pass at the top,
+    then move + bound maintenance through ``core.reducer``) — the one
+    copy every driver iterates: ``lax.while_loop`` in ``_run_loop`` and
+    :func:`fit_core`, python-unrolled in the dry-run analysis variant.
+    State is ``(EngineCarry, level_n, level_g)``; the ladder backend
+    transitions its levels shard-locally via :func:`select_bucket`,
+    every other backend carries constant zeros."""
 
-    Exits when converged / out of iterations (terminal), or — compact
-    backend only — when the pending candidate count leaves its bucket
-    ((cap/2, cap] for points, (cap/4, cap] for group slots), at which
-    point the host picks the next bucket from the exit scalars. That
-    is the ONLY host sync."""
+    def body(state):
+        c, ln, lg = state
+        new_as, new_ub, new_lb, pairs, gmax = core.candidate_pass(
+            points, c.centroids, c.assignments, c.ub, c.lb, c.need,
+            groups, members, gsize, x2=c.x2, c2=c.c2, level_n=ln,
+            level_g=lg)
+        mv = move_and_bounds(
+            points, c.centroids, new_as, new_ub, new_lb, groups,
+            k=core.k, n_groups=core.n_groups, reducer=core.reducer,
+            weights=weights, x2=c.x2, refresh=core.refresh_in_move)
+        n_cand = jnp.sum(mv.need.astype(jnp.int32))
+        carry = EngineCarry(c.iteration + 1, mv.centroids, mv.c2, new_as,
+                            mv.ub, mv.lb, c.x2, mv.need, n_cand, gmax,
+                            mv.shift, c.evals.add(pairs).add(mv.tightened))
+        if core.backend == "ladder":
+            ln, lg = select_bucket(n_cand, gmax, ln, lg,
+                                   cap_ns=core.cap_ns, cap_gs=core.cap_gs,
+                                   down_n=core.down_n, down_g=core.down_g)
+        return carry, ln, lg
 
-    def cond(c):
+    return body
+
+
+def _loop_cond(core: PassCore, *, max_iters, tol, min_cap=0,
+               allow_downshift=False):
+    """The loop condition matching :func:`_loop_body`. Terminal exits
+    (converged / out of iterations) for every backend — with a psum
+    reducer the centroid sums are replicated, so ``shift`` agrees on
+    every shard and the collectives stay in lockstep. The host-bucketed
+    compact backend additionally exits when the pending candidate count
+    leaves its bucket (or a strictly smaller bucket would fit), which
+    is the batch driver's ONLY host sync."""
+
+    def cond(state):
+        c, _, _ = state
         active = jnp.logical_and(c.iteration < max_iters, c.shift > tol)
-        if backend != "compact":
+        if core.backend != "compact":
             return active
-        fits = jnp.logical_and(c.n_cand <= cap_n, c.gmax <= cap_g)
+        fits = jnp.logical_and(c.n_cand <= core.cap_n,
+                               c.gmax <= core.cap_g)
         ok = jnp.logical_and(active, fits)
-        if allow_downshift and (down_n or down_g):
+        if allow_downshift and (core.down_n or core.down_g):
             # exit when a strictly smaller point bucket would fit — the
             # candidate pass is linear in cap_n, so one sync (~ms) buys
             # back every decay-phase iteration's padding. The group cap
@@ -718,55 +964,121 @@ def _run_loop(points, carry, groups, members, gsize, *, backend, k,
             # lazily to avoid segment churn. The factors are the tuned
             # hysteresis (EngineConfig.down_n / down_g; 0 disables).
             down = jnp.bool_(False)
-            if down_n:
+            if core.down_n:
                 down = jnp.logical_or(down, jnp.logical_and(
-                    c.n_cand * down_n <= cap_n, cap_n > min_cap))
-            if down_g:
+                    c.n_cand * core.down_n <= core.cap_n,
+                    core.cap_n > min_cap))
+            if core.down_g:
                 # gmax == 0 means the last pass saw no candidates, not
                 # that one group slot suffices — never downshift on it
                 down = jnp.logical_or(down, jnp.logical_and(
                     jnp.logical_and(c.gmax > 0,
-                                    c.gmax * down_g <= cap_g),
-                    cap_g > 1))
+                                    c.gmax * core.down_g <= core.cap_g),
+                    core.cap_g > 1))
             ok = jnp.logical_and(ok, jnp.logical_not(down))
         return ok
 
-    def body(c):
-        new_as, new_ub, new_lb, pairs, gmax = _candidate_pass(
-            backend, points, c, groups, members, gsize, n_groups=n_groups,
-            cap_n=cap_n, cap_g=cap_g, chunk=chunk, tile_n=tile_n,
-            interpret=interpret, use_groups=use_groups,
-            group_gather_factor=group_gather_factor,
-            refresh_in_pass=refresh_in_pass)
-        new_c, new_c2, ub_t, lb_dec, need, shift, tightened = \
-            move_and_bounds(points, c.centroids, new_as, new_ub, new_lb,
-                            groups, k=k, n_groups=n_groups, x2=c.x2,
-                            refresh=not (backend == "compact"
-                                         and refresh_in_pass))
-        n_cand = jnp.sum(need.astype(jnp.int32))
-        return EngineCarry(c.iteration + 1, new_c, new_c2, new_as, ub_t,
-                           lb_dec, c.x2, need, n_cand, gmax, shift,
-                           c.evals.add(pairs).add(tightened))
-
-    return jax.lax.while_loop(cond, body, carry)
+    return cond
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "backend", "n_groups", "cap_n", "cap_g", "chunk", "tile_n",
-    "interpret", "use_groups", "group_gather_factor", "refresh_in_pass"))
-def _epilogue(points, carry, groups, members, gsize, *, backend, n_groups,
-              cap_n, cap_g, chunk, tile_n, interpret, use_groups=None,
-              group_gather_factor=4, refresh_in_pass=False):
+    "core", "max_iters", "tol", "min_cap", "allow_downshift"))
+def _run_loop(points, weights, carry, groups, members, gsize, *, core,
+              max_iters, tol, min_cap, allow_downshift):
+    """One capacity bucket's worth of device-resident iterations.
+
+    Exits when converged / out of iterations (terminal), or — compact
+    backend only — when the pending candidate count leaves its bucket
+    ((cap/2, cap] for points, (cap/4, cap] for group slots), at which
+    point the host picks the next bucket from the exit scalars. That
+    is the ONLY host sync."""
+    carry, _, _ = jax.lax.while_loop(
+        _loop_cond(core, max_iters=max_iters, tol=tol, min_cap=min_cap,
+                   allow_downshift=allow_downshift),
+        _loop_body(core, points, weights, groups, members, gsize),
+        (carry, jnp.int32(0), jnp.int32(0)))
+    return carry
+
+
+def _epilogue_pass(core: PassCore, points, weights, valid, carry, groups,
+                   members, gsize, level_n, level_g):
+    """Final pending candidate pass + (weighted) inertia — the traced
+    tail shared by `_epilogue` and :func:`fit_core`. ``valid`` masks
+    sentinel padding rows of an uneven sharded fit (their assignment is
+    K; clip the gather and zero their cost)."""
+    new_as, _, _, pairs, _ = core.candidate_pass(
+        points, carry.centroids, carry.assignments, carry.ub, carry.lb,
+        carry.need, groups, members, gsize, x2=carry.x2, c2=carry.c2,
+        level_n=level_n, level_g=level_g)
+    evals = core.reducer.add(carry.evals.add(pairs).total())
+    own = carry.centroids[jnp.minimum(new_as, core.k - 1)]
+    d = rowwise_dists(points, own)
+    d2 = d * d
+    if valid is not None:
+        d2 = jnp.where(valid, d2, 0.0)
+    if weights is not None:
+        d2 = d2 * weights
+    inertia = core.reducer.add(jnp.sum(d2))
+    return new_as, evals, inertia
+
+
+@functools.partial(jax.jit, static_argnames=("core",))
+def _epilogue(points, weights, carry, groups, members, gsize, *, core):
     """Final pending candidate pass + inertia, fused into one program."""
-    new_as, _, _, pairs, _ = _candidate_pass(
-        backend, points, carry, groups, members, gsize, n_groups=n_groups,
-        cap_n=cap_n, cap_g=cap_g, chunk=chunk, tile_n=tile_n,
-        interpret=interpret, use_groups=use_groups,
-        group_gather_factor=group_gather_factor,
-        refresh_in_pass=refresh_in_pass)
-    evals = carry.evals.add(pairs)
-    d = rowwise_dists(points, carry.centroids[new_as])
-    return new_as, evals.total(), jnp.sum(d * d)
+    return _epilogue_pass(core, points, weights, None, carry, groups,
+                          members, gsize, jnp.int32(0), jnp.int32(0))
+
+
+def fit_core(points, init_c, groups, members, gsize, *, core: PassCore,
+             max_iters: int, tol: float, weights=None, valid=None):
+    """The WHOLE fit — init, candidate-pass loop, epilogue — as one
+    traced function with zero host syncs: the driver body shared by the
+    fused small-problem path (local reducer, full static caps) and the
+    ``shard_map`` body in :mod:`repro.core.distributed` (psum reducer +
+    ladder backend). ``valid`` masks sentinel padding rows of an uneven
+    sharded fit (assignment K drops out of every segment_sum; ub=0 /
+    lb=inf keeps them filtered forever, and their K initial distance
+    rows are taken back out of the eval count); ``weights`` are
+    per-point sample weights (see :func:`move_and_bounds`).
+
+    Returns ``(centroids, assignments, n_iters, evals, inertia)``.
+    """
+    k = core.k
+    carry = _init_carry(points, init_c, groups, n_groups=core.n_groups)
+    if valid is not None:
+        pad = jnp.sum(1.0 - valid.astype(jnp.float32))
+        carry = carry._replace(
+            assignments=jnp.where(valid, carry.assignments, k),
+            ub=jnp.where(valid, carry.ub, 0.0),
+            lb=jnp.where(valid[:, None], carry.lb, jnp.inf),
+            evals=carry.evals.add(-pad * k))
+    state = (carry, jnp.int32(0), jnp.int32(0))
+    carry, ln, lg = jax.lax.while_loop(
+        _loop_cond(core, max_iters=max_iters, tol=tol),
+        _loop_body(core, points, weights, groups, members, gsize), state)
+    new_as, evals, inertia = _epilogue_pass(
+        core, points, weights, valid, carry, groups, members, gsize, ln,
+        lg)
+    return carry.centroids, new_as, carry.iteration, evals, inertia
+
+
+def fit_core_unrolled(points, init_c, groups, members, gsize, *,
+                      core: PassCore, n_iters: int, weights=None):
+    """:func:`fit_core` with the while_loop replaced by exactly
+    ``n_iters`` python iterations of the SAME :func:`_loop_body` —
+    analysis artifacts only (XLA cost_analysis does not descend into
+    while bodies; the N-vs-(N-1) unrolled diff gives the exact
+    per-iteration cost)."""
+    carry = _init_carry(points, init_c, groups, n_groups=core.n_groups)
+    state = (carry, jnp.int32(0), jnp.int32(0))
+    body = _loop_body(core, points, weights, groups, members, gsize)
+    for _ in range(n_iters):
+        state = body(state)
+    carry, ln, lg = state
+    new_as, evals, inertia = _epilogue_pass(
+        core, points, weights, None, carry, groups, members, gsize, ln,
+        lg)
+    return carry.centroids, new_as, carry.iteration, evals, inertia
 
 
 @functools.partial(jax.jit, static_argnames=("n_groups",))
@@ -785,22 +1097,18 @@ def _init_carry(points, init_c, groups, *, n_groups):
         jnp.float32(jnp.inf), state0.distance_evals)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "backend", "k", "n_groups", "max_iters", "tol", "chunk", "tile_n",
-    "interpret", "use_groups", "group_gather_factor", "refresh_in_pass"))
-def _fit_fused(points, init_c, *, backend, k, n_groups, max_iters, tol,
-               chunk, tile_n, interpret, use_groups=None,
-               group_gather_factor=4, refresh_in_pass=False):
+@functools.partial(jax.jit, static_argnames=("core", "max_iters", "tol"))
+def _fit_fused(points, init_c, weights, *, core, max_iters, tol):
     """Whole fit — grouping, init, loop, epilogue — as ONE program.
 
     Used for small problems (and exercised by tests for every backend):
     at a few thousand points the ~10 eager setup dispatches of the
     bucketed driver cost more than the entire fit, so run a single
     full-capacity segment with the group-membership table built on
-    device (Lmax = K upper bound; fine at small K). Reuses _run_loop /
-    _epilogue — at full capacities their bucket conditions are
-    vacuous, so nesting them in this jit inlines to one program."""
-    n = points.shape[0]
+    device (Lmax = K upper bound; fine at small K). Reuses
+    :func:`fit_core` — at full capacities the loop's bucket conditions
+    are vacuous, so the whole fit inlines to one program."""
+    k, n_groups = core.k, core.n_groups
     groups = group_centroids(init_c, n_groups)
     # device-side (G, K) membership table: row g lists group g's
     # centroids in ascending order, -1-padded
@@ -812,23 +1120,8 @@ def _fit_fused(points, init_c, *, backend, k, n_groups, max_iters, tol,
         sg, rank].set(order.astype(jnp.int32))
     gsize = jax.ops.segment_sum(jnp.ones((k,), jnp.float32), groups,
                                 num_segments=n_groups)
-
-    carry = _init_carry(points, init_c, groups, n_groups=n_groups)
-    carry = _run_loop(points, carry, groups, members, gsize,
-                      backend=backend, k=k, n_groups=n_groups, cap_n=n,
-                      cap_g=n_groups, max_iters=max_iters, tol=tol,
-                      min_cap=n, allow_downshift=False, chunk=chunk,
-                      tile_n=tile_n, interpret=interpret,
-                      use_groups=use_groups,
-                      group_gather_factor=group_gather_factor,
-                      refresh_in_pass=refresh_in_pass)
-    new_as, evals, inertia = _epilogue(
-        points, carry, groups, members, gsize, backend=backend,
-        n_groups=n_groups, cap_n=n, cap_g=n_groups, chunk=chunk,
-        tile_n=tile_n, interpret=interpret, use_groups=use_groups,
-        group_gather_factor=group_gather_factor,
-        refresh_in_pass=refresh_in_pass)
-    return carry.centroids, new_as, carry.iteration, evals, inertia
+    return fit_core(points, init_c, groups, members, gsize, core=core,
+                    max_iters=max_iters, tol=tol, weights=weights)
 
 
 def _bucket_cap(count: int, floor: int, ceil: int) -> int:
@@ -836,6 +1129,24 @@ def _bucket_cap(count: int, floor: int, ceil: int) -> int:
     lattice keeps the set of compiled programs small and reusable."""
     cap = 1 << (max(int(count), 1) - 1).bit_length()
     return max(min(cap, ceil), min(floor, ceil))
+
+
+def build_assign_tables(centroids, n_groups: int | None = None):
+    """Group map + host-built tables over FIXED centroids — THE one
+    copy of the inference-side table recipe (K//10 group heuristic,
+    clamp to K, :func:`group_centroids`, :func:`build_group_tables`),
+    shared by :func:`assign` and the estimator caches.
+
+    Returns ``(groups, members, gsize)``.
+    """
+    k = centroids.shape[0]
+    if n_groups is None:
+        n_groups = max(k // 10, 1)
+    n_groups = int(min(max(n_groups, 1), k))
+    groups = group_centroids(centroids, n_groups)
+    groups_np = np.asarray(jax.device_get(groups))
+    members, gsize = build_group_tables(groups_np, n_groups)
+    return groups, members, gsize
 
 
 def build_group_tables(groups_np: np.ndarray, n_groups: int):
@@ -896,7 +1207,8 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
         tile_n: int | None = None, min_cap: int | None = None,
         chunk: int | None = None, interpret: bool | None = None,
         max_bucket_switches: int = 32, return_stats: bool = False,
-        config: EngineConfig | None = None, tune: str = "auto"):
+        config: EngineConfig | None = None, tune: str = "auto",
+        sample_weight=None):
     """Run filtered K-means fully device-resident.
 
     See the module docstring for backend semantics. ``interpret=None``
@@ -911,6 +1223,11 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     defaults. Tuning changes wall-clock only — assignments and inertia
     are bit-identical across configurations. Individual kwargs
     (``tile_n``/``min_cap``/``chunk``) override both.
+
+    ``sample_weight``: optional (N,) per-point weights, entering the
+    centroid sums and the inertia only (bounds and filter decisions
+    are weight-independent). ``None`` compiles the exact pre-weight
+    program; uniform weights of 1.0 are bit-identical to it.
 
     Returns a :class:`~repro.core.kmeans.KMeansResult`; with
     ``return_stats=True`` returns ``(result, EngineStats)``.
@@ -928,6 +1245,8 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
         init_c = init_c.astype(jnp.float32)
     k = init_c.shape[0]
     n, d = points.shape
+    weights = None if sample_weight is None else \
+        jnp.asarray(sample_weight, jnp.float32)
 
     if tune == "force" and config is None:
         from .. import tune as _tune
@@ -939,7 +1258,7 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
         config=config, tune=tune, n=n, k=k, d=d)
 
     if backend == "lloyd":
-        res = _lloyd_jit(points, init_c, max_iters=int(max_iters),
+        res = _lloyd_jit(points, init_c, weights, max_iters=int(max_iters),
                          tol=float(tol))
         if not return_stats:
             return res              # keep the tiny-problem route lean:
@@ -956,25 +1275,28 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
 
     stats = EngineStats(backend=backend, x2_evals=1, config=cfg.to_dict())
     cap_floor = min(cfg.min_cap, n)
-    common_kw = dict(chunk=cfg.chunk, tile_n=cfg.tile_n,
-                     group_gather_factor=cfg.group_gather_factor,
-                     refresh_in_pass=cfg.refresh_in_pass,
-                     interpret=bool(interpret))
+
+    def _core(cap_n, cap_g, l_max):
+        ug = use_groups_decision(
+            cap_n=cap_n, cap_g=cap_g, l_max=l_max, k=k, chunk=cfg.chunk,
+            group_gather_factor=cfg.group_gather_factor) \
+            if backend == "compact" else None
+        return PassCore.from_config(
+            cfg, backend=backend, k=k, n_groups=n_groups, cap_n=cap_n,
+            cap_g=cap_g, use_groups=ug, interpret=bool(interpret))
+
     if n <= 4 * cap_floor:
         # small problem: eager setup + bucket churn costs more than the
         # whole fit — run the fully-fused single-program path
-        ug = use_groups_decision(
-            cap_n=n, cap_g=n_groups, l_max=k, k=k, chunk=cfg.chunk,
-            group_gather_factor=cfg.group_gather_factor) \
-            if backend == "compact" else None
+        core = _core(n, n_groups, k)
         c, a, it, evals, inertia = _fit_fused(
-            points, init_c, backend=backend, k=k, n_groups=n_groups,
-            max_iters=int(max_iters), tol=tol, use_groups=ug, **common_kw)
+            points, init_c, weights, core=core, max_iters=int(max_iters),
+            tol=tol)
         stats.host_syncs = 1
         stats.n_iters = int(it)
         if backend == "compact":
             stats.caps_history.append((n, n_groups))
-            stats.use_groups.append(bool(ug))
+            stats.use_groups.append(bool(core.use_groups))
         result = KMeansResult(c, a, it, evals, inertia)
         return (result, stats) if return_stats else result
 
@@ -993,27 +1315,15 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     # dense pass on padding. The first real candidate count exits the
     # loop after iteration 1 and picks the right bucket.
     cap_n, cap_g = cap_floor, 1
-    loop_kw = dict(backend=backend, k=k, n_groups=n_groups,
-                   max_iters=int(max_iters), tol=tol, min_cap=cap_floor,
-                   down_n=cfg.down_n, down_g=cfg.down_g, **common_kw)
-
-    def _ug(cn, cg):
-        if backend != "compact":
-            return None
-        return use_groups_decision(
-            cap_n=cn, cap_g=cg, l_max=l_max, k=k, chunk=cfg.chunk,
-            group_gather_factor=cfg.group_gather_factor)
-
     while True:
-        ug = _ug(cap_n, cap_g)
+        core = _core(cap_n, cap_g, l_max)
         stats.caps_history.append((cap_n, cap_g))
         if backend == "compact":
-            stats.use_groups.append(bool(ug))
+            stats.use_groups.append(bool(core.use_groups))
         allow_down = stats.bucket_switches < max_bucket_switches
-        carry = _run_loop(points, carry, groups, members, gsize,
-                          cap_n=cap_n, cap_g=cap_g,
-                          allow_downshift=allow_down, use_groups=ug,
-                          **loop_kw)
+        carry = _run_loop(points, weights, carry, groups, members, gsize,
+                          core=core, max_iters=int(max_iters), tol=tol,
+                          min_cap=cap_floor, allow_downshift=allow_down)
         it, nc, gm, sh = jax.device_get(
             (carry.iteration, carry.n_cand, carry.gmax, carry.shift))
         stats.host_syncs += 1
@@ -1042,9 +1352,8 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     else:
         ecap_n, ecap_g = n, n_groups
     assignments, evals, inertia = _epilogue(
-        points, carry, groups, members, gsize, backend=backend,
-        n_groups=n_groups, cap_n=ecap_n, cap_g=ecap_g,
-        use_groups=_ug(ecap_n, ecap_g), **common_kw)
+        points, weights, carry, groups, members, gsize,
+        core=_core(ecap_n, ecap_g, l_max))
 
     result = KMeansResult(carry.centroids, assignments, carry.iteration,
                           evals, inertia)
@@ -1058,7 +1367,7 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
 # --------------------------------------------------------------------------
 
 class StreamStepOut(NamedTuple):
-    """Outputs of one mini-batch :func:`stream_update` step. The
+    """Outputs of one mini-batch :func:`stream_step`. The
     returned ``ub``/``lb`` are already decayed by this step's centroid
     drift, i.e. valid against the RETURNED centroids — exactly what the
     caller's per-shard bound cache wants to store."""
@@ -1097,66 +1406,121 @@ def stream_bounds(points, centroids, assignments, ub, lb):
         maybe.astype(jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "k", "n_groups", "cap_n", "cap_g", "chunk", "group_gather_factor"))
-def stream_update(points, centroids, counts, decay, groups, members, gsize,
-                  assignments, ub_t, lb, need, *, k, n_groups, cap_n,
-                  cap_g, chunk=2048, group_gather_factor=4):
+@functools.partial(jax.jit, static_argnames=("core",))
+def stream_step(points, centroids, counts, decay, groups, members, gsize,
+                assignments, ub_t, lb, need, weights=None, *,
+                core: PassCore):
     """One mini-batch against EXTERNAL carry (centroids + effective
-    counts): the engine's two-level compacted candidate pass, then a
-    decayed count-weighted centroid update, then post-move bound decay.
+    counts): the PassCore candidate pass, then the decayed
+    count-weighted centroid EMA (:data:`EMA_UPDATE` through
+    :func:`move_and_bounds`), then post-move bound decay — the same
+    pass + epilogue pieces as the batch drivers, instantiated with the
+    streaming update rule.
 
     This is the reusable single-pass step behind
-    :class:`repro.streaming.StreamingKMeans`. The update is the
-    mini-batch EMA ``c <- (decay * n_c * c + sum_batch) / (decay * n_c
-    + b_c)``: ``decay=1`` is pure count-weighting (per-centroid 1/n
-    learning rate), ``decay<1`` caps the memory at ~1/(1-decay)
-    batches. ``cap_n`` MUST be >= the candidate count (the caller syncs
-    it via :func:`stream_bounds`); ``cap_g`` is a guess — the pass's
-    ``lax.cond`` spills to the dense branch when it is exceeded, and
-    the returned ``gmax`` recalibrates the next visit.
-    ``group_gather_factor`` / ``chunk`` come from the tuned
-    :class:`EngineConfig` when the caller enables tuning.
+    :class:`repro.streaming.StreamingKMeans`; with a psum
+    ``core.reducer`` it is also the body of the sharded step
+    (``repro.core.distributed.make_stream_update_sharded``): the
+    reducer joins the batch sums/counts so the EMA (and drift) come
+    out replicated, and reduces the scalar telemetry
+    (``pairs``/``gmax``/``batch_cost``).
+
+    ``core.cap_n`` MUST be >= the (per-shard) candidate count (the
+    caller syncs it via :func:`stream_bounds`); ``core.cap_g`` is a
+    guess — the pass's ``lax.cond`` spills to the dense branch when it
+    is exceeded, and the returned ``gmax`` recalibrates the next
+    visit. ``weights``: optional per-point sample weights entering the
+    batch sums/counts (the EMA's effective mass) and the batch cost.
+
+    Sentinel-padded rows (sharded caller) carry assignment K: the
+    traced drift gather clamps, and the caller slices their ub/lb off.
     """
     x2 = row_norms_sq(points)                 # once per batch
     c2 = row_norms_sq(centroids)
-    new_as, nub, nlb, pairs, gmax = compact_candidate_pass(
-        points, centroids, assignments, ub_t, lb, groups, members, gsize,
-        need, cap_n=cap_n, cap_g=cap_g, n_groups=n_groups, chunk=chunk,
-        opt_sq=True, x2=x2, c2=c2, group_gather_factor=group_gather_factor)
-    bsums, bcounts = centroid_sums(points, new_as, k)
-    return stream_ema_and_decay(centroids, counts, decay, bsums, bcounts,
-                                new_as, nub, nlb, pairs, gmax, groups,
-                                n_groups=n_groups)
+    new_as, nub, nlb, pairs, gmax = core.candidate_pass(
+        points, centroids, assignments, ub_t, lb, need, groups, members,
+        gsize, x2=x2, c2=c2)
+    mv = move_and_bounds(
+        points, centroids, new_as, nub, nlb, groups, k=core.k,
+        n_groups=core.n_groups, reducer=core.reducer, update=EMA_UPDATE,
+        counts=counts, decay=decay, weights=weights, refresh=False)
+    cost = nub * nub if weights is None else weights * nub * nub
+    return StreamStepOut(mv.centroids, mv.counts, new_as, mv.ub, mv.lb,
+                         core.reducer.add(pairs), core.reducer.max(gmax),
+                         mv.drift, mv.gdrift, mv.batch_counts,
+                         core.reducer.add(jnp.sum(cost)))
 
 
-def stream_ema_and_decay(centroids, counts, decay, bsums, bcounts, new_as,
-                         nub, nlb, pairs, gmax, groups, *, n_groups: int):
-    """The streaming step's epilogue — decayed count-weighted centroid
-    EMA, this step's drift, post-move bound decay — shared by the local
-    :func:`stream_update` and the sharded step
-    (``repro.core.distributed.make_stream_update_sharded``, which
-    psums ``bsums``/``bcounts`` before calling and reduces the scalar
-    outputs after). THE single copy of the update rule."""
-    dec = counts * decay
-    new_counts = dec + bcounts
-    sums = dec[:, None] * centroids + bsums
-    # fractional decayed counts: guard with an epsilon, not the batch
-    # fit's max(counts, 1) (which assumes integer counts)
-    new_c = jnp.where(new_counts[:, None] > 1e-6,
-                      sums / jnp.maximum(new_counts, 1e-6)[:, None],
-                      centroids)
+# --------------------------------------------------------------------------
+# tiled assignment (predict / transform / score drive this)
+# --------------------------------------------------------------------------
 
-    drift = jnp.linalg.norm(new_c - centroids, axis=-1)
-    # clamp: segment_max of an EMPTY group is -inf, which the batch
-    # loop tolerates but would poison the caller's cumulative drift
-    # ledger (inf - inf = NaN on the next inflation)
-    gdrift = jnp.maximum(
-        jax.ops.segment_max(drift, groups, num_segments=n_groups), 0.0)
-    # sentinel-padded rows (sharded caller) carry assignment K: the
-    # traced gather clamps, and the caller slices their ub/lb off
-    out_ub = nub + drift[new_as]
-    out_lb = jnp.maximum(nlb - gdrift[None, :], 0.0)
-    return StreamStepOut(new_c, new_counts, new_as, out_ub, out_lb,
-                         pairs, gmax, drift, gdrift, bcounts,
-                         jnp.sum(nub * nub))
+@functools.partial(jax.jit, static_argnames=("core",))
+def _assign_tile(points, centroids, c2, groups, members, gsize, *,
+                 core: PassCore):
+    """Exact nearest-centroid assignment of ONE tile through the
+    PassCore candidate pass with vacuous bounds — norm-cached
+    (``c2`` once per assign, ``x2`` per tile), never materialising an
+    (N, K) matrix beyond the tile."""
+    b = points.shape[0]
+    x2 = row_norms_sq(points)
+    a0 = jnp.zeros((b,), jnp.int32)
+    ub = jnp.full((b,), jnp.inf, jnp.float32)
+    lb = jnp.zeros((b, core.n_groups), jnp.float32)
+    need = jnp.ones((b,), bool)
+    nas, nub, _, pairs, _ = core.candidate_pass(
+        points, centroids, a0, ub, lb, need, groups, members, gsize,
+        x2=x2, c2=c2)
+    return nas, nub, pairs
+
+
+def assign(points, centroids, *, n_groups: int | None = None,
+           groups=None, members=None, gsize=None, tile_n: int = 8192,
+           chunk: int = 2048, group_gather_factor: int = 4):
+    """Tiled exact nearest-centroid assignment against fixed centroids.
+
+    The inference-side counterpart of the fit drivers: each ``tile_n``
+    slice of ``points`` runs the PassCore compact candidate pass with
+    vacuous bounds, so no O(N*K) distance buffer ever exists (the
+    per-tile working set is (tile_n, K)) and the centroid norms are
+    computed once for the whole call. ``KMeans.predict`` /
+    ``StreamingKMeans.predict`` / ``score`` all land here.
+
+    ``groups``/``members``/``gsize`` may be passed when the caller
+    already holds the group tables (the streaming estimator does);
+    otherwise they are built from the centroids (``n_groups`` defaults
+    to the K//10 heuristic).
+
+    Returns ``(labels, dists)``: (N,) int32 assignments and (N,) f32
+    exact distances to the assigned centroid.
+    """
+    points = jnp.asarray(points)
+    if points.dtype != jnp.float32:
+        points = points.astype(jnp.float32)
+    centroids = jnp.asarray(centroids)
+    if centroids.dtype != jnp.float32:
+        centroids = centroids.astype(jnp.float32)
+    n = points.shape[0]
+    k = centroids.shape[0]
+    if groups is None:
+        groups, members, gsize = build_assign_tables(centroids, n_groups)
+    n_groups = int(gsize.shape[0])
+
+    c2 = row_norms_sq(centroids)
+    tile = min(_bucket_cap(min(tile_n, n), 1, n), n)
+    core = PassCore(backend="compact", k=k, n_groups=n_groups,
+                    cap_n=tile, cap_g=n_groups, chunk=chunk,
+                    group_gather_factor=group_gather_factor)
+    labels, dists = [], []
+    for lo in range(0, n, tile):
+        part = points[lo:lo + tile]
+        if part.shape[0] < tile:      # pad the ragged tail tile so the
+            part = jnp.pad(           # per-tile program compiles once
+                part, ((0, tile - part.shape[0]), (0, 0)))
+        nas, nub, _ = _assign_tile(part, centroids, c2, groups, members,
+                                   gsize, core=core)
+        labels.append(nas)
+        dists.append(nub)
+    labels = jnp.concatenate(labels)[:n]
+    dists = jnp.concatenate(dists)[:n]
+    return labels, dists

@@ -32,14 +32,27 @@ from .distances import (pairwise_dists, pairwise_sq_dists, row_norms_sq,
 # shared pieces
 # --------------------------------------------------------------------------
 
-def centroid_sums(points, assignments, k):
+def centroid_sums(points, assignments, k, weights=None):
     """Per-cluster partial sums + counts — the psum'able half of the
     centroid update (the distributed fit reduces these across shards
-    before dividing)."""
+    before dividing).
+
+    ``weights``: optional (N,) per-point sample weights — the sums
+    become weighted sums and the counts the per-cluster weighted mass.
+    ``None`` keeps the exact pre-weight program (and uniform weights
+    of 1.0 are bit-identical to it: multiplying by 1.0f is exact)."""
     pts = points.astype(jnp.float32)
-    sums = jax.ops.segment_sum(pts, assignments, num_segments=k)   # (K, D)
-    counts = jax.ops.segment_sum(jnp.ones((pts.shape[0],), jnp.float32),
-                                 assignments, num_segments=k)      # (K,)
+    if weights is None:
+        sums = jax.ops.segment_sum(pts, assignments,
+                                   num_segments=k)                 # (K, D)
+        counts = jax.ops.segment_sum(
+            jnp.ones((pts.shape[0],), jnp.float32), assignments,
+            num_segments=k)                                        # (K,)
+    else:
+        w = weights.astype(jnp.float32)
+        sums = jax.ops.segment_sum(w[:, None] * pts, assignments,
+                                   num_segments=k)
+        counts = jax.ops.segment_sum(w, assignments, num_segments=k)
     return sums, counts
 
 
@@ -51,12 +64,13 @@ def centroids_from_sums(sums, counts, prev_centroids):
     return jnp.where(counts[:, None] > 0, sums / safe, prev_centroids)
 
 
-def update_centroids(points, assignments, k, prev_centroids):
+def update_centroids(points, assignments, k, prev_centroids,
+                     weights=None):
     """Segment-sum centroid update — O(N*D), the right formulation for
     CPU/scatter hardware. (The TPU path uses the one-hot MXU matmul in
     kernels/centroid_update.py instead; same math.)
     """
-    sums, counts = centroid_sums(points, assignments, k)
+    sums, counts = centroid_sums(points, assignments, k, weights=weights)
     return centroids_from_sums(sums, counts, prev_centroids), counts
 
 
@@ -123,17 +137,23 @@ class KMeansResult(NamedTuple):
     inertia: jnp.ndarray          # sum of squared distances to assigned
 
 
-def _inertia(points, centroids, assignments):
+def _inertia(points, centroids, assignments, weights=None):
     d = rowwise_dists(points, centroids[assignments])
-    return jnp.sum(d * d)
+    d2 = d * d
+    if weights is not None:
+        d2 = d2 * weights.astype(jnp.float32)
+    return jnp.sum(d2)
 
 
 # --------------------------------------------------------------------------
 # Lloyd baseline
 # --------------------------------------------------------------------------
 
-def lloyd(points, init_centroids, max_iters: int = 100, tol: float = 1e-4):
-    """Standard K-means — the CPU baseline of the paper's Table."""
+def lloyd(points, init_centroids, max_iters: int = 100, tol: float = 1e-4,
+          weights=None):
+    """Standard K-means — the CPU baseline of the paper's Table.
+    ``weights``: optional (N,) sample weights (weighted centroid means
+    and inertia; the distance work per iteration is unchanged)."""
     k = init_centroids.shape[0]
     n = points.shape[0]
 
@@ -145,7 +165,8 @@ def lloyd(points, init_centroids, max_iters: int = 100, tol: float = 1e-4):
         i, centroids, _, _, evals = state
         d = pairwise_dists(points, centroids)
         assign = jnp.argmin(d, axis=1).astype(jnp.int32)
-        new_c, _ = update_centroids(points, assign, k, centroids)
+        new_c, _ = update_centroids(points, assign, k, centroids,
+                                    weights=weights)
         shift = jnp.max(jnp.linalg.norm(new_c - centroids, axis=-1))
         return i + 1, new_c, assign, shift, evals.add(jnp.float32(n) * k)
 
@@ -153,7 +174,7 @@ def lloyd(points, init_centroids, max_iters: int = 100, tol: float = 1e-4):
             jnp.zeros(n, jnp.int32), jnp.float32(jnp.inf), EvalCount.of(0))
     i, centroids, assign, _, evals = jax.lax.while_loop(cond, body, init)
     return KMeansResult(centroids, assign, i, evals.total(),
-                        _inertia(points, centroids, assign))
+                        _inertia(points, centroids, assign, weights))
 
 
 # --------------------------------------------------------------------------
@@ -193,7 +214,7 @@ def _init_filter_state(points, centroids, groups, n_groups, x2=None,
 
 
 def _filtered_step(points, state: FilterState, groups, n_groups: int, k: int,
-                   x2=None):
+                   x2=None, weights=None):
     """One KPynq iteration: centroid move -> bound maintenance ->
     point-level filter -> group-level filter -> masked distance pass.
 
@@ -206,7 +227,8 @@ def _filtered_step(points, state: FilterState, groups, n_groups: int, k: int,
     rows = jnp.arange(n)
 
     # 1. move centroids from current assignments; measure drift
-    new_c, _ = update_centroids(points, state.assignments, k, state.centroids)
+    new_c, _ = update_centroids(points, state.assignments, k,
+                                state.centroids, weights=weights)
     c2 = row_norms_sq(new_c)                       # once per iteration
     drift = jnp.linalg.norm(new_c - state.centroids, axis=-1)          # (K,)
     group_drift = jax.ops.segment_max(drift, groups, num_segments=n_groups)
@@ -266,9 +288,11 @@ def _filtered_step(points, state: FilterState, groups, n_groups: int, k: int,
 
 
 def yinyang(points, init_centroids, n_groups: int | None = None,
-            max_iters: int = 100, tol: float = 1e-4):
+            max_iters: int = 100, tol: float = 1e-4, weights=None):
     """KPynq filtered K-means. ``n_groups=1`` -> point-level filter only;
-    default ``K // 10`` groups (the Yinyang heuristic)."""
+    default ``K // 10`` groups (the Yinyang heuristic). ``weights``:
+    optional (N,) sample weights — they enter the centroid means and
+    the inertia only; the filters stay weight-independent."""
     k = init_centroids.shape[0]
     if n_groups is None:
         n_groups = max(k // 10, 1)
@@ -282,9 +306,11 @@ def yinyang(points, init_centroids, n_groups: int | None = None,
         return jnp.logical_and(state.iteration < max_iters, state.shift > tol)
 
     def body(state):
-        return _filtered_step(points, state, groups, n_groups, k, x2=x2)
+        return _filtered_step(points, state, groups, n_groups, k, x2=x2,
+                              weights=weights)
 
     state = jax.lax.while_loop(cond, body, state0)
     return KMeansResult(state.centroids, state.assignments, state.iteration,
                         state.distance_evals.total(),
-                        _inertia(points, state.centroids, state.assignments))
+                        _inertia(points, state.centroids, state.assignments,
+                                 weights))

@@ -19,7 +19,8 @@ candidate pass to point streams that never fit in memory at once:
    distance work at all. First visits run with vacuous bounds —
    exactly the batch fit's first-iteration semantics.
 3. **Candidate pass + update** —
-   :func:`repro.core.engine.stream_update`: the engine's
+   :func:`repro.core.engine.stream_step` (the engine's PassCore
+   instantiated with the streaming EMA update rule): the
    capacity-bucketed two-level compacted candidate pass (point
    survivors stream-compacted into a pow2 bucket sized from the synced
    candidate count; the group bucket sized from the shard's last-visit
@@ -50,39 +51,17 @@ the normal step so their bounds enter the cache.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import engine as _engine
 from ..core.api import NotFittedError
-from ..core.engine import _bucket_cap, compact_candidate_pass
+from ..core.engine import PassCore, _bucket_cap
 from ..core.init import kmeans_plusplus, random_init
 from ..core.kmeans import group_centroids
 from .state import (BoundCache, DriftLedger, ShardBounds, StreamStats,
                     inflate_bounds)
-
-
-@functools.partial(jax.jit, static_argnames=("n_groups", "cap_n", "chunk",
-                                             "group_gather_factor"))
-def _assign_fresh(points, centroids, groups, members, gsize, *, n_groups,
-                  cap_n, chunk=2048, group_gather_factor=4):
-    """Exact nearest-centroid assignment through the engine's candidate
-    pass with vacuous bounds (used by predict / inertia_of — keeps even
-    inference on the no-dense-matrix path, under the same tuned
-    crossover as the fitted passes)."""
-    b = points.shape[0]
-    a0 = jnp.zeros((b,), jnp.int32)
-    ub = jnp.full((b,), jnp.inf, jnp.float32)
-    lb = jnp.zeros((b, n_groups), jnp.float32)
-    need = jnp.ones((b,), bool)
-    nas, nub, _, pairs, _ = compact_candidate_pass(
-        points, centroids, a0, ub, lb, groups, members, gsize, need,
-        cap_n=cap_n, cap_g=n_groups, n_groups=n_groups, opt_sq=True,
-        chunk=chunk, group_gather_factor=group_gather_factor)
-    return nas, nub, pairs
 
 
 class StreamingKMeans:
@@ -199,7 +178,7 @@ class StreamingKMeans:
         return int(min(g, self.n_clusters))
 
     def _initialize(self) -> None:
-        buf = np.concatenate([p for _, p in self._buffer], axis=0)
+        buf = np.concatenate([p for _, p, _ in self._buffer], axis=0)
         k = self.n_clusters
         if len(buf) < k:
             raise ValueError(
@@ -240,48 +219,69 @@ class StreamingKMeans:
         self._far: list = []              # [(ub, point)] reseed reservoir
 
         replay, self._buffer, self._buffered = self._buffer, [], 0
-        for sid, batch in replay:
-            self._step(batch, sid)
+        for sid, batch, w in replay:
+            self._step(batch, sid, w)
 
     # -- the per-batch step ------------------------------------------------
 
-    def partial_fit(self, points, shard_id=None) -> "StreamingKMeans":
+    def partial_fit(self, points, shard_id=None,
+                    sample_weight=None) -> "StreamingKMeans":
         """One mini-batch update. ``shard_id`` (hashable) keys the bound
         cache: pass it whenever the same points will be presented again
         (epochs over a :class:`~repro.data.PointStream` do this
-        automatically) so carried bounds can skip the distance work."""
+        automatically) so carried bounds can skip the distance work.
+
+        ``sample_weight``: optional (B,) per-point weights — they enter
+        the batch sums/counts (the EMA's effective per-centroid mass)
+        and the EWA batch-cost estimate; bounds and filter decisions
+        are weight-independent, so the bound cache works unchanged."""
         pts = np.asarray(points, np.float32)
         if pts.ndim != 2 or pts.shape[0] == 0:
             raise ValueError(f"expected a non-empty (B, D) batch, got "
                              f"shape {pts.shape}")
+        w = None if sample_weight is None else \
+            np.asarray(sample_weight, np.float32)
+        if w is not None and w.shape != (pts.shape[0],):
+            raise ValueError(f"sample_weight shape {w.shape} does not "
+                             f"match batch shape {pts.shape}")
         if not self.initialized:
-            self._buffer.append((shard_id, pts))
+            self._buffer.append((shard_id, pts, w))
             self._buffered += len(pts)
             self.stats_.init_batches += 1
             size = self.init_size or 2 * self.n_clusters
             if self._buffered >= max(size, self.n_clusters):
                 self._initialize()
             return self
-        self._step(pts, shard_id)
+        self._step(pts, shard_id, w)
         return self
 
     def _shard_put(self, arr, spec):
         from jax.sharding import NamedSharding, PartitionSpec as P
         return jax.device_put(arr, NamedSharding(self.mesh, P(*spec)))
 
-    def _sharded_update_fn(self, cap_n: int, cap_g: int):
+    def _sharded_update_fn(self, cap_n: int, cap_g: int, weighted: bool):
         from ..core import distributed as _dist
-        key = (cap_n, cap_g)
+        key = (cap_n, cap_g, weighted)
         fn = self._sharded_updates.get(key)
         if fn is None:
             fn = _dist.make_stream_update_sharded(
                 self.mesh, self.mesh_axes, k=self.n_clusters,
                 n_groups=self._g, cap_n=cap_n, cap_g=cap_g,
-                chunk=self.chunk, group_gather_factor=self._ggf)
+                chunk=self.chunk, group_gather_factor=self._ggf,
+                weighted=weighted)
             self._sharded_updates[key] = fn
         return fn
 
-    def _step(self, pts_np: np.ndarray, sid) -> None:
+    def _local_core(self, cap_n: int, cap_g: int) -> PassCore:
+        """The single-device streaming step's pass core at one
+        (cap_n, cap_g) bucket — the same PassCore the batch and
+        distributed drivers instantiate."""
+        return PassCore(backend="compact", k=self.n_clusters,
+                        n_groups=self._g, cap_n=cap_n, cap_g=cap_g,
+                        chunk=self.chunk,
+                        group_gather_factor=self._ggf)
+
+    def _step(self, pts_np: np.ndarray, sid, w_np=None) -> None:
         b = pts_np.shape[0]
         g = self._g
         k = self.n_clusters
@@ -307,6 +307,10 @@ class StreamingKMeans:
                 [pts_np, np.zeros((pad, pts_np.shape[1]), np.float32)], 0))
         else:
             pts = jnp.asarray(pts_np)
+        w = None
+        if w_np is not None:
+            w = jnp.asarray(np.concatenate(
+                [w_np, np.zeros((pad,), np.float32)], 0) if pad else w_np)
         bp = b + pad
         shard_b = bp // self._n_shards if sharded else b
 
@@ -365,26 +369,28 @@ class StreamingKMeans:
                     shard_b)
         cap_g = _bucket_cap(gmax_guess, 1, g)
         if sharded:
-            upd = self._sharded_update_fn(cap_n, cap_g)
-            out = upd(self._shard_put(pts, (ax, None)),
-                      self._shard_put(self._centroids, (None, None)),
-                      self._shard_put(self._counts, (None,)),
-                      self._shard_put(jnp.float32(self.decay), ()),
-                      self._shard_put(self._groups, (None,)),
-                      self._shard_put(self._members, (None, None)),
-                      self._shard_put(self._gsize, (None,)),
-                      self._shard_put(assign, (ax,)),
-                      self._shard_put(ub_t, (ax,)),
-                      self._shard_put(lb_d, (ax, None)),
-                      self._shard_put(need, (ax,)))
+            upd = self._sharded_update_fn(cap_n, cap_g, w is not None)
+            args = [self._shard_put(pts, (ax, None)),
+                    self._shard_put(self._centroids, (None, None)),
+                    self._shard_put(self._counts, (None,)),
+                    self._shard_put(jnp.float32(self.decay), ()),
+                    self._shard_put(self._groups, (None,)),
+                    self._shard_put(self._members, (None, None)),
+                    self._shard_put(self._gsize, (None,)),
+                    self._shard_put(assign, (ax,)),
+                    self._shard_put(ub_t, (ax,)),
+                    self._shard_put(lb_d, (ax, None)),
+                    self._shard_put(need, (ax,))]
+            if w is not None:
+                args.append(self._shard_put(w, (ax,)))
+            out = upd(*args)
             st.sharded_batches += 1
         else:
-            out = _engine.stream_update(
+            out = _engine.stream_step(
                 pts, self._centroids, self._counts,
                 jnp.float32(self.decay), self._groups, self._members,
-                self._gsize, assign, ub_t, lb_d, need, k=k, n_groups=g,
-                cap_n=cap_n, cap_g=cap_g, chunk=self.chunk,
-                group_gather_factor=self._ggf)
+                self._gsize, assign, ub_t, lb_d, need, w,
+                core=self._local_core(cap_n, cap_g))
         self._centroids, self._counts = out.centroids, out.counts
 
         (nas_np, ub_np, lb_np, pairs, gmax, drift_np, gdrift_np,
@@ -399,7 +405,9 @@ class StreamingKMeans:
         st.batches += 1
         st.points_seen += b
         st.distance_evals += float(pairs) + tightened
-        per_pt = float(bcost) / b
+        # EWA cost per unit of sample mass (== per point when unweighted)
+        mass = b if w_np is None else max(float(w_np.sum()), 1e-12)
+        per_pt = float(bcost) / mass
         self.ewa_inertia_ = per_pt if self.ewa_inertia_ is None else \
             (1 - self._ewa_alpha) * self.ewa_inertia_ \
             + self._ewa_alpha * per_pt
@@ -461,13 +469,14 @@ class StreamingKMeans:
         ``source`` may be a :class:`repro.data.PointStream` (shard ids
         carried automatically; ``epochs`` replays it), a sequence of
         arrays or ``(shard_id, array)`` pairs, or any iterable of
-        those / of ``{'points': ..., 'shard_id': ...}`` dicts (the
-        ``PrefetchingLoader`` protocol). Generators are consumed once
-        regardless of ``epochs``. Short streams that never reach
+        those / of ``{'points': ..., 'shard_id': ...,
+        'sample_weight': ...}`` dicts (the ``PrefetchingLoader``
+        protocol; ``sample_weight`` optional). Generators are consumed
+        once regardless of ``epochs``. Short streams that never reach
         ``init_size`` are flushed into an init at the end."""
         seen = 0
-        for sid, pts in self._iter_source(source, epochs):
-            self.partial_fit(pts, shard_id=sid)
+        for sid, pts, w in self._iter_source(source, epochs):
+            self.partial_fit(pts, shard_id=sid, sample_weight=w)
             seen += 1
             if max_batches is not None and seen >= max_batches:
                 break
@@ -479,19 +488,21 @@ class StreamingKMeans:
     def _coerce(item):
         if isinstance(item, dict):
             sid = item.get("shard_id")
+            w = item.get("sample_weight")
             return (None if sid is None else int(sid)), \
-                np.asarray(item["points"])
+                np.asarray(item["points"]), \
+                (None if w is None else np.asarray(w, np.float32))
         if isinstance(item, tuple) and len(item) == 2:
             sid, pts = item
             if isinstance(pts, dict):       # PrefetchingLoader: (step, batch)
                 return StreamingKMeans._coerce(pts)
-            return sid, np.asarray(pts)
-        return None, np.asarray(item)
+            return sid, np.asarray(pts), None
+        return None, np.asarray(item), None
 
     def _iter_source(self, source, epochs):
         if hasattr(source, "batches"):      # PointStream
-            for item in source.batches(epochs):
-                yield item
+            for sid, pts in source.batches(epochs):
+                yield sid, pts, None
             return
         import collections.abc
         reiterable = isinstance(source, collections.abc.Sequence)
@@ -521,21 +532,27 @@ class StreamingKMeans:
         return self._labels_last
 
     def predict(self, points) -> np.ndarray:
+        """Tiled exact nearest-centroid assignment through the PassCore
+        candidate pass (``engine.assign``) — no (N, K) matrix, bounded
+        per-tile working set, under the same tuned crossover as the
+        fitted passes."""
         self._require_fitted()
-        pts = jnp.asarray(np.asarray(points, np.float32))
-        nas, _, _ = _assign_fresh(
-            pts, self._centroids, self._groups, self._members, self._gsize,
-            n_groups=self._g, cap_n=pts.shape[0], chunk=self.chunk,
-            group_gather_factor=self._ggf)
-        return np.asarray(jax.device_get(nas))
+        labels, _ = _engine.assign(
+            np.asarray(points, np.float32), self._centroids,
+            groups=self._groups, members=self._members, gsize=self._gsize,
+            chunk=self.chunk, group_gather_factor=self._ggf)
+        return np.asarray(jax.device_get(labels))
 
-    def inertia_of(self, points) -> float:
-        """Exact sum of squared distances of ``points`` to their nearest
-        current centroid (through the engine pass — no (N, K) matrix)."""
+    def inertia_of(self, points, sample_weight=None) -> float:
+        """Exact (optionally weighted) sum of squared distances of
+        ``points`` to their nearest current centroid (through the tiled
+        engine pass — no (N, K) matrix)."""
         self._require_fitted()
-        pts = jnp.asarray(np.asarray(points, np.float32))
-        _, nub, _ = _assign_fresh(
-            pts, self._centroids, self._groups, self._members, self._gsize,
-            n_groups=self._g, cap_n=pts.shape[0], chunk=self.chunk,
-            group_gather_factor=self._ggf)
-        return float(jnp.sum(nub * nub))
+        _, dists = _engine.assign(
+            np.asarray(points, np.float32), self._centroids,
+            groups=self._groups, members=self._members, gsize=self._gsize,
+            chunk=self.chunk, group_gather_factor=self._ggf)
+        d2 = dists * dists
+        if sample_weight is not None:
+            d2 = d2 * jnp.asarray(np.asarray(sample_weight, np.float32))
+        return float(jnp.sum(d2))

@@ -20,13 +20,15 @@ from __future__ import annotations
 from ..core.engine import DEFAULT_CONFIG, EngineConfig
 from .cache import (ENV_VAR, TuneCache, default_cache, default_path,
                     set_default_cache)
-from .search import autotune, get_or_tune, timing_measure
+from .search import (autotune, get_or_tune, sharded_timing_measure,
+                     timing_measure)
 from .signature import pow2_bucket, signature
 
 __all__ = [
     "EngineConfig", "DEFAULT_CONFIG", "TuneCache", "default_cache",
     "default_path", "set_default_cache", "autotune", "get_or_tune",
-    "timing_measure", "signature", "pow2_bucket", "lookup", "ENV_VAR",
+    "timing_measure", "sharded_timing_measure", "signature",
+    "pow2_bucket", "lookup", "ENV_VAR",
 ]
 
 

@@ -32,6 +32,7 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 
 from ..core.engine import EngineConfig
 from .cache import TuneCache, default_cache
@@ -67,6 +68,24 @@ def candidate_backends(platform: str) -> tuple:
     return ("compact", "lloyd")
 
 
+def _best_of(run, repeats):
+    """Best-of-``repeats`` wall-clock of ``run`` (warmup excluded);
+    sub-ms runs keep sampling until ~50ms of timing has accumulated
+    (capped) so one noisy sample cannot flip a backend decision."""
+    run()                                        # compile + warm caches
+    best = float("inf")
+    done = 0
+    spent = 0.0
+    while done < repeats or (spent < 0.05 and done < 4 * repeats):
+        t0 = time.perf_counter()
+        run()
+        dt = time.perf_counter() - t0
+        best = min(best, dt)
+        spent += dt
+        done += 1
+    return best
+
+
 def timing_measure(points, init_c, *, n_groups=None, max_iters=50,
                    tol=1e-4, repeats=3):
     """Default measurement: best-of-``repeats`` wall-clock of a full
@@ -79,21 +98,54 @@ def timing_measure(points, init_c, *, n_groups=None, max_iters=50,
                            max_iters=max_iters, tol=tol, config=cfg,
                            tune="off")
             jax.block_until_ready(jax.tree.leaves(r))
-        run()                                    # compile + warm caches
-        best = float("inf")
-        done = 0
-        spent = 0.0
-        # sub-ms fits are where one noisy sample flips the backend
-        # decision: keep sampling short fits until ~50ms of timing has
-        # accumulated (capped) so best-of really is the floor
-        while done < repeats or (spent < 0.05 and done < 4 * repeats):
-            t0 = time.perf_counter()
-            run()
-            dt = time.perf_counter() - t0
-            best = min(best, dt)
-            spent += dt
-            done += 1
-        return best
+        return _best_of(run, repeats)
+
+    return measure
+
+
+def sharded_timing_measure(shard_points, init_c, shards: int, *,
+                           mesh=None, axes=("data",), n_groups=None,
+                           max_iters=50, tol=1e-4, repeats=3):
+    """Measurement hook for the DISTRIBUTED signatures (``...|sS``):
+    best-of-``repeats`` wall-clock of ``distributed_yinyang(backend=
+    "compact", config=cfg)`` — the unified driver under ``shard_map``
+    — so sharded winners are produced by sharded measurement, not the
+    single-device fallback.
+
+    ``shard_points`` is ONE SHARD's worth of points (the unit the
+    ``...|sS`` signature is keyed on); the global problem is its
+    ``shards``-fold tiling, which keeps the per-shard shapes (and thus
+    the compiled programs) exactly those of a real S-way fit.
+    ``mesh=None`` builds a 1-D mesh over the first ``shards`` local
+    devices (raises when the runtime has fewer — force them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=S`` on CPU).
+    """
+    import numpy as np
+
+    from ..core.distributed import distributed_yinyang
+
+    if mesh is None:
+        devs = jax.devices()
+        if len(devs) < shards:
+            raise ValueError(
+                f"sharded_timing_measure needs >= {shards} devices, "
+                f"found {len(devs)}; on CPU force them with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{shards}")
+        mesh = jax.sharding.Mesh(np.asarray(devs[:shards]), ("data",))
+        axes = ("data",)
+    axes = tuple(axes)
+    global_pts = jnp.concatenate([jnp.asarray(shard_points)] * shards,
+                                 axis=0)
+
+    def measure(cfg: EngineConfig) -> float:
+        def run():
+            r = distributed_yinyang(
+                global_pts, init_c, mesh, axes=axes, n_groups=n_groups,
+                max_iters=max_iters, tol=tol, backend="compact",
+                config=cfg, tune="off")
+            jax.block_until_ready(jax.tree.leaves(r))
+        return _best_of(run, repeats)
 
     return measure
 
@@ -102,16 +154,24 @@ def autotune(points, init_c, *, n_groups=None, max_iters: int = 50,
              tol: float = 1e-4, cache: TuneCache | None = None,
              measure=None, repeats: int = 3, max_rounds: int = 2,
              max_measurements: int = 32, platform: str | None = None,
-             shards: int = 1, verbose: bool = False) -> EngineConfig:
+             shards: int = 1, mesh=None, axes=("data",),
+             verbose: bool = False) -> EngineConfig:
     """Search the engine configuration space for this problem and
-    persist the winner under its (platform, N, K, D) signature.
+    persist the winner under its (platform, N, K, D[, shards])
+    signature.
 
     Returns the winning :class:`EngineConfig`. ``measure`` overrides
     the wall-clock measurement (tests use a stub); ``max_measurements``
-    bounds the total number of distinct configs measured. ``shards >
-    1`` stores the winner under the DISTRIBUTED key (``points`` then
-    being one shard's worth): pass a ``measure`` that times the sharded
-    fit — the built-in timing measure runs single-device.
+    bounds the total number of distinct configs measured.
+
+    ``shards > 1`` tunes the DISTRIBUTED key (``points`` then being one
+    shard's worth): the default measure is
+    :func:`sharded_timing_measure` — the unified driver under
+    ``shard_map`` over ``mesh`` (built from the first ``shards`` local
+    devices when None), so ``...|sS`` winners come from sharded
+    measurement. The backend grid is skipped there (the sharded body
+    realises its own compact pass; Lloyd is not a sharded candidate)
+    and the climb runs over the compact knobs.
     """
     if platform is None:
         platform = jax.default_backend()
@@ -121,9 +181,15 @@ def autotune(points, init_c, *, n_groups=None, max_iters: int = 50,
     if cache is None:
         cache = default_cache()
     if measure is None:
-        measure = timing_measure(points, init_c, n_groups=n_groups,
-                                 max_iters=max_iters, tol=tol,
-                                 repeats=repeats)
+        if shards > 1:
+            measure = sharded_timing_measure(
+                points, init_c, shards, mesh=mesh, axes=axes,
+                n_groups=n_groups, max_iters=max_iters, tol=tol,
+                repeats=repeats)
+        else:
+            measure = timing_measure(points, init_c, n_groups=n_groups,
+                                     max_iters=max_iters, tol=tol,
+                                     repeats=repeats)
 
     memo: dict = {}
 
@@ -144,18 +210,26 @@ def autotune(points, init_c, *, n_groups=None, max_iters: int = 50,
     # Lloyd, and only settle the backend question after the climb.
     # (Deciding at seed stage threw away configs that beat Lloyd only
     # after tuning — exactly the medium-shape regime this issue is
-    # about.)
-    lloyd_cost = cost(EngineConfig(backend="lloyd"))
-    engine_seeds = [EngineConfig(backend=b)
-                    for b in candidate_backends(platform)
-                    if b != "lloyd"]
-    best = min(engine_seeds, key=cost)
-    best_cost = cost(best)
+    # about.) Sharded keys have no backend question: the shard_map body
+    # is always the ladder'd compact pass, so only its knobs climb.
+    if shards > 1:
+        lloyd_cost = None
+        best = EngineConfig(backend="compact")
+        best_cost = cost(best)
+        climb_knobs = BACKEND_KNOBS["compact"]
+    else:
+        lloyd_cost = cost(EngineConfig(backend="lloyd"))
+        engine_seeds = [EngineConfig(backend=b)
+                        for b in candidate_backends(platform)
+                        if b != "lloyd"]
+        best = min(engine_seeds, key=cost)
+        best_cost = cost(best)
+        climb_knobs = BACKEND_KNOBS[best.backend]
 
     # phase 2: coordinate hill-climb over the filtered winner's knobs
     for _ in range(max_rounds):
         improved = False
-        for knob in BACKEND_KNOBS[best.backend]:
+        for knob in climb_knobs:
             for val in KNOB_LATTICE[knob]:
                 if val == getattr(best, knob):
                     continue
@@ -168,15 +242,18 @@ def autotune(points, init_c, *, n_groups=None, max_iters: int = 50,
             break
 
     # phase 3: the backend decision, made on tuned-vs-lloyd terms
-    if lloyd_cost < best_cost:
+    if lloyd_cost is not None and lloyd_cost < best_cost:
         best, best_cost = EngineConfig(backend="lloyd"), lloyd_cost
 
-    cache.store(sig, best, ms=best_cost * 1e3, lloyd_ms=lloyd_cost * 1e3,
-                measured=len(memo), n=int(n), k=int(k), d=int(d))
+    extra = {} if lloyd_cost is None else {"lloyd_ms": lloyd_cost * 1e3}
+    cache.store(sig, best, ms=best_cost * 1e3, measured=len(memo),
+                n=int(n), k=int(k), d=int(d), shards=int(shards),
+                **extra)
     if verbose:
+        vs = "" if lloyd_cost is None else \
+            f" vs lloyd {lloyd_cost * 1e3:.2f}ms"
         print(f"tune[{sig}] winner: {best.backend} "
-              f"{best_cost * 1e3:.2f}ms vs lloyd "
-              f"{lloyd_cost * 1e3:.2f}ms ({len(memo)} configs)")
+              f"{best_cost * 1e3:.2f}ms{vs} ({len(memo)} configs)")
     return best
 
 

@@ -84,6 +84,40 @@ def test_sklearn_style_api():
     np.testing.assert_array_equal(pred, km.labels_[:10])
 
 
+def test_sklearn_parity_predict_transform_score():
+    """The sklearn-parity inference surface on top of the tiled
+    assign: transform is the (N, K) distance space, predict its
+    argmin, score the negative inertia, fit_predict the training
+    labels."""
+    pts, _, k = _dataset(n=2000, k=8, seed=2)
+    km = KMeans(n_clusters=8, seed=1, engine="compact",
+                tune="off").fit(pts)
+    T = km.transform(pts[:300])
+    assert T.shape == (300, 8)
+    d_ref = np.linalg.norm(np.asarray(pts[:300])[:, None]
+                           - np.asarray(km.cluster_centers_)[None],
+                           axis=-1)
+    np.testing.assert_allclose(T, d_ref, atol=1e-3)
+    np.testing.assert_array_equal(km.predict(pts[:300]), d_ref.argmin(1))
+    # score == -inertia on the training set
+    assert km.score(pts) == pytest.approx(-km.inertia_, rel=1e-4)
+    km2 = KMeans(n_clusters=8, seed=1, engine="compact", tune="off")
+    np.testing.assert_array_equal(km2.fit_predict(pts), km.labels_)
+
+
+def test_predict_tiled_beyond_one_tile():
+    """predict runs tiled (ragged N >> tile) and still matches the
+    dense argmin — the no-O(N*K)-buffer contract of the new path."""
+    pts, _, _ = _dataset(n=20000, k=12, seed=4)
+    km = KMeans(n_clusters=12, seed=1, engine="compact",
+                tune="off").fit(pts)
+    got = km.predict(pts)
+    ref = np.linalg.norm(
+        np.asarray(pts)[:, None]
+        - np.asarray(km.cluster_centers_)[None], axis=-1).argmin(1)
+    np.testing.assert_array_equal(got, ref)
+
+
 def test_empty_cluster_keeps_previous_centroid():
     # two far blobs, k=3: one centroid starts far away and owns nothing
     pts = jnp.concatenate([

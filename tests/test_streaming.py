@@ -138,23 +138,26 @@ def test_reseed_records_drift_and_keeps_bounds_valid():
     assert np.isfinite(skm.inertia_of(stream.shard(0)))
 
 
-def test_stream_update_empty_group_drift_is_finite():
+def test_stream_step_empty_group_drift_is_finite():
     """An empty Yinyang group's segment_max drift is -inf; left
     unclamped it would poison the cumulative drift ledger (inf - inf =
-    NaN on the next bound inflation). Regression for the clamp in
-    engine.stream_update."""
+    NaN on the next bound inflation). Regression for the clamp in the
+    streaming EMA update strategy (engine.EMA_UPDATE, applied through
+    engine.stream_step)."""
     rng = np.random.default_rng(0)
     k, g, b, d = 4, 2, 32, 3
     pts = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
     c = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
     groups_np = np.zeros((k,), np.int64)            # group 1 is EMPTY
     members, gsize = engine.build_group_tables(groups_np, g)
-    out = engine.stream_update(
+    core = engine.PassCore(backend="compact", k=k, n_groups=g,
+                           cap_n=b, cap_g=g)
+    out = engine.stream_step(
         pts, c, jnp.zeros((k,), jnp.float32), jnp.float32(1.0),
         jnp.asarray(groups_np.astype(np.int32)), members, gsize,
         jnp.zeros((b,), jnp.int32), jnp.full((b,), jnp.inf, jnp.float32),
         jnp.zeros((b, g), jnp.float32), jnp.ones((b,), bool),
-        k=k, n_groups=g, cap_n=b, cap_g=g)
+        core=core)
     assert np.all(np.isfinite(np.asarray(out.gdrift)))
     assert np.all(np.asarray(out.gdrift) >= 0)
 

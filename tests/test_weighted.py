@@ -1,0 +1,188 @@
+"""Sample-weight support across the unified drivers.
+
+Two contracts:
+
+* UNIFORM PARITY — fitting with ``sample_weight=1`` is BIT-IDENTICAL
+  to fitting without weights, on every backend and driver (the
+  weighted program multiplies by exactly 1.0f, which is exact, so any
+  divergence is a real defect in the weight threading).
+* DUPLICATION ≡ INTEGER WEIGHTS — a dataset with each point repeated
+  ``w`` times lands on the same fixed point as the unique points fit
+  with integer weights ``w`` (the defining semantics of sample
+  weights; summation order differs so parity is allclose, not bit).
+
+The distributed (4/8-device) uniform-parity lane lives in
+``tests/test_distributed.py`` (multidevice marker).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KMeans, engine, kmeans_plusplus, lloyd, yinyang
+from repro.data import make_points
+from repro.streaming import StreamingKMeans
+
+BACKENDS = ["oracle", "compact", "pallas", "lloyd"]
+
+
+def _dataset(n, d, k, seed=0):
+    pts, _, _ = make_points(n, d, k, seed=seed)
+    pts = jnp.asarray(pts)
+    init = kmeans_plusplus(jax.random.PRNGKey(seed + 1), pts, k)
+    return pts, init
+
+
+def _assert_bit_identical(r_a, r_b):
+    assert int(r_a.n_iters) == int(r_b.n_iters)
+    np.testing.assert_array_equal(np.asarray(r_a.assignments),
+                                  np.asarray(r_b.assignments))
+    assert float(r_a.inertia) == float(r_b.inertia)
+    np.testing.assert_array_equal(np.asarray(r_a.centroids),
+                                  np.asarray(r_b.centroids))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_uniform_weight_bit_parity_engine(backend):
+    pts, init = _dataset(1000, 8, 12)
+    kw = dict(n_groups=3, max_iters=50, tol=1e-5, backend=backend,
+              interpret=True, tune="off")
+    r0 = engine.fit(pts, init, **kw)
+    r1 = engine.fit(pts, init, sample_weight=jnp.ones((1000,)), **kw)
+    _assert_bit_identical(r0, r1)
+
+
+def test_uniform_weight_bit_parity_large_bucketed_path():
+    # large enough for the host-bucketed driver (weights ride through
+    # every segment of the capacity-bucketed loop)
+    pts, init = _dataset(6000, 16, 32)
+    kw = dict(n_groups=3, max_iters=50, tol=1e-5, backend="compact",
+              tune="off")
+    r0 = engine.fit(pts, init, **kw)
+    r1 = engine.fit(pts, init, sample_weight=jnp.ones((6000,)), **kw)
+    _assert_bit_identical(r0, r1)
+
+
+def test_uniform_weight_bit_parity_reference_paths():
+    pts, init = _dataset(1500, 6, 9)
+    ones = jnp.ones((1500,))
+    _assert_bit_identical(lloyd(pts, init, 40, 1e-5),
+                          lloyd(pts, init, 40, 1e-5, weights=ones))
+    _assert_bit_identical(yinyang(pts, init, max_iters=40, tol=1e-5),
+                          yinyang(pts, init, max_iters=40, tol=1e-5,
+                                  weights=ones))
+
+
+def test_uniform_weight_bit_parity_streaming():
+    pts, _, _ = make_points(2048, 8, 8, seed=2)
+    sk_u = StreamingKMeans(8, seed=3)
+    sk_w = StreamingKMeans(8, seed=3)
+    for i in range(8):
+        b = pts[i * 256:(i + 1) * 256]
+        sk_u.partial_fit(b, shard_id=i)
+        sk_w.partial_fit(b, shard_id=i,
+                         sample_weight=np.ones(len(b), np.float32))
+    np.testing.assert_array_equal(sk_u.cluster_centers_,
+                                  sk_w.cluster_centers_)
+    np.testing.assert_array_equal(sk_u.counts_, sk_w.counts_)
+    assert sk_u.stats_.distance_evals == sk_w.stats_.distance_evals
+    assert sk_u.ewa_inertia_ == pytest.approx(sk_w.ewa_inertia_)
+
+
+@pytest.mark.parametrize("backend", ["compact", "oracle"])
+@pytest.mark.parametrize("seed", [0, 5])
+def test_duplicated_points_equal_integer_weights(backend, seed):
+    """The defining property of sample weights: repeating point i
+    w_i times == weighting it w_i. Fixed points must agree (allclose:
+    the summation orders differ)."""
+    rng = np.random.default_rng(seed)
+    base, _, _ = make_points(700, 6, 8, seed=seed)
+    wts = rng.integers(1, 5, size=700)
+    dup = np.repeat(base, wts, axis=0)
+    init = kmeans_plusplus(jax.random.PRNGKey(seed + 1),
+                           jnp.asarray(base), 8)
+    kw = dict(max_iters=60, tol=1e-6, backend=backend, tune="off")
+    r_w = engine.fit(jnp.asarray(base), init,
+                     sample_weight=jnp.asarray(wts, jnp.float32), **kw)
+    r_d = engine.fit(jnp.asarray(dup), init, **kw)
+    np.testing.assert_allclose(np.asarray(r_w.centroids),
+                               np.asarray(r_d.centroids), atol=1e-3)
+    # the unique points' assignments agree with their duplicated copies
+    offsets = np.concatenate([[0], np.cumsum(wts)[:-1]])
+    np.testing.assert_array_equal(np.asarray(r_w.assignments),
+                                  np.asarray(r_d.assignments)[offsets])
+    np.testing.assert_allclose(float(r_w.inertia), float(r_d.inertia),
+                               rtol=1e-4)
+
+
+def test_duplicated_points_equal_integer_weights_lloyd_reference():
+    rng = np.random.default_rng(11)
+    base, _, _ = make_points(500, 4, 6, seed=11)
+    wts = rng.integers(1, 4, size=500)
+    dup = np.repeat(base, wts, axis=0)
+    init = kmeans_plusplus(jax.random.PRNGKey(12), jnp.asarray(base), 6)
+    r_w = lloyd(jnp.asarray(base), init, 60, 1e-6,
+                weights=jnp.asarray(wts, jnp.float32))
+    r_d = lloyd(jnp.asarray(dup), init, 60, 1e-6)
+    np.testing.assert_allclose(np.asarray(r_w.centroids),
+                               np.asarray(r_d.centroids), atol=1e-3)
+
+
+def test_weighted_fits_agree_across_backends():
+    """One non-uniform weighting, every backend: identical fixed point
+    (the filters never see the weights, so the cross-backend exactness
+    contract extends verbatim to weighted fits)."""
+    pts, init = _dataset(900, 8, 10, seed=4)
+    w = jnp.asarray(
+        np.random.default_rng(4).uniform(0.25, 4.0, 900), jnp.float32)
+    results = [engine.fit(pts, init, n_groups=3, max_iters=50, tol=1e-5,
+                          backend=b, interpret=True, tune="off",
+                          sample_weight=w)
+               for b in BACKENDS]
+    ref = results[0]
+    for r in results[1:]:
+        np.testing.assert_array_equal(np.asarray(r.assignments),
+                                      np.asarray(ref.assignments))
+        np.testing.assert_allclose(float(r.inertia), float(ref.inertia),
+                                   rtol=1e-5)
+    r_y = yinyang(pts, init, n_groups=3, max_iters=50, tol=1e-5,
+                  weights=w)
+    np.testing.assert_array_equal(np.asarray(r_y.assignments),
+                                  np.asarray(ref.assignments))
+
+
+def test_kmeans_api_weighted_surface():
+    pts, _, _ = make_points(1200, 6, 8, seed=7)
+    w = np.random.default_rng(7).uniform(0.5, 2.0, 1200).astype(
+        np.float32)
+    km = KMeans(n_clusters=8, engine="compact", seed=1, tune="off")
+    labels = km.fit_predict(pts, sample_weight=w)
+    np.testing.assert_array_equal(labels, km.labels_)
+    # score is the negative weighted inertia of the training set
+    s = km.score(pts, sample_weight=w)
+    assert s == pytest.approx(-km.inertia_, rel=1e-4)
+    # uniform-weight fit == unweighted fit through the API
+    km_u = KMeans(n_clusters=8, engine="compact", seed=1,
+                  tune="off").fit(pts)
+    km_1 = KMeans(n_clusters=8, engine="compact", seed=1,
+                  tune="off").fit(pts, sample_weight=np.ones(1200))
+    np.testing.assert_array_equal(km_u.labels_, km_1.labels_)
+    assert km_u.inertia_ == km_1.inertia_
+
+
+def test_streaming_weighted_counts_are_weight_mass():
+    """Weighted streaming: the EMA's effective counts accumulate the
+    WEIGHT MASS (not the row count), and doubling every weight doubles
+    the mass without moving the centroids."""
+    pts, _, _ = make_points(1024, 6, 4, seed=9)
+    w = np.full((256,), 2.0, np.float32)
+    sk_1 = StreamingKMeans(4, seed=2, decay=1.0)
+    sk_2 = StreamingKMeans(4, seed=2, decay=1.0)
+    for i in range(4):
+        b = pts[i * 256:(i + 1) * 256]
+        sk_1.partial_fit(b, shard_id=i)
+        sk_2.partial_fit(b, shard_id=i, sample_weight=w)
+    assert float(sk_2.counts_.sum()) == pytest.approx(
+        2.0 * float(sk_1.counts_.sum()))
+    np.testing.assert_allclose(sk_2.cluster_centers_,
+                               sk_1.cluster_centers_, atol=1e-5)
