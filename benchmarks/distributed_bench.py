@@ -77,6 +77,10 @@ def run(scale=1.0, dataset="uci-medium", repeats=3):
         lambda: distributed_yinyang(pts, init, mesh, backend="compact",
                                     **kw), repeats)
     r_single = engine_fit(pts, init, backend="compact", tune="off", **kw)
+    # telemetry pass OUTSIDE the timed loops: per-shard rings + skew
+    # (results are bit-identical, so the rings describe the timed fit)
+    _, dstats = distributed_yinyang(pts, init, mesh, backend="compact",
+                                    return_stats=True, **kw)
 
     iters = int(r_comp.n_iters)
     # dense equivalent: the init pass + one full (N, K) pass per
@@ -99,6 +103,9 @@ def run(scale=1.0, dataset="uci-medium", repeats=3):
         "inertia": float(r_comp.inertia),
         "inertia_rel_err": abs(float(r_comp.inertia) - inertia_s)
         / max(inertia_s, 1e-12),
+        # ring summary incl. per-shard work skew (max/mean evals per
+        # iteration across shards; 1.0 = perfectly balanced)
+        "telemetry": dstats.telemetry(),
     }
 
 
@@ -139,7 +146,8 @@ def main(argv=None):
           f"work_red={row['work_reduction']:.2f}x "
           f"parity={'OK' if row['assignments_match'] else 'FAIL'} "
           f"inertia_err={row['inertia_rel_err']:.2e} "
-          f"iters={row['iters']}")
+          f"iters={row['iters']} "
+          f"skew={(row['telemetry'] or {}).get('max_shard_skew', 1.0):.2f}")
     if args.json:
         write_json(row, args.json)
     if args.check:

@@ -34,6 +34,7 @@ from repro.configs.kpynq import paper_suite
 from repro.core import (engine_fit, kmeans_plusplus, lloyd, yinyang,
                         yinyang_compact)
 from repro.data import make_points
+from repro.obs import ObsConfig, provenance
 
 
 def _time_interleaved(fns, repeats=4, min_seconds=0.8, max_repeats=16):
@@ -87,6 +88,14 @@ def run(limit=None, scale=1.0):
         ])
         entry = _tune.default_cache().entry(
             _tune.signature(n, prob.k, prob.n_dims))
+        # telemetry row: one extra obs-enabled fit OUTSIDE the timed
+        # loops (the ring drain costs a device_get the timed rows must
+        # not pay) — results are bit-identical, so the ring describes
+        # exactly the fit that was measured above
+        _, st = engine_fit(pts, init, n_groups=prob.n_groups,
+                           max_iters=prob.max_iters, tol=prob.tol,
+                           backend="auto", obs=ObsConfig(),
+                           return_stats=True)
         rows.append({
             "dataset": prob.name, "n": n, "d": prob.n_dims, "k": prob.k,
             "iters": int(r_l.n_iters),
@@ -103,6 +112,9 @@ def run(limit=None, scale=1.0):
             # the winning engine configuration this row was measured
             # under (None = untuned defaults)
             "tuned": (entry or {}).get("config"),
+            # per-iteration ring summary: iters-to-converge, mean
+            # candidate fraction surviving the filters, total evals
+            "telemetry": st.telemetry(),
         })
     return rows
 
@@ -136,11 +148,12 @@ def write_json(rows, path="BENCH_kmeans.json", scale=1.0):
     except (FileNotFoundError, ValueError):
         pass
     payload["scale"] = scale
+    payload["provenance"] = provenance()
     payload["datasets"] = [
         {key: r[key] for key in ("dataset", "n", "d", "k", "iters",
                                  "lloyd_ms", "oracle_ms", "compact_ms",
                                  "engine_ms", "speedup", "work_reduction",
-                                 "tuned")}
+                                 "tuned", "telemetry")}
         for r in rows]
     payload.update(summarize(rows))
     with open(path, "w") as fh:

@@ -56,13 +56,24 @@ class KMeans:
         ``engine`` is not None.
     decay : per-batch count decay for the STREAMING path (see
         :meth:`partial_fit`); unused by :meth:`fit`.
+    obs : observability switch (see :mod:`repro.obs`): ``None``/``False``
+        off, ``True`` defaults, a ``MetricsRegistry``/``ObsConfig`` for
+        control. Engine-path fits record the per-iteration telemetry
+        ring into ``stats_`` and publish metrics/events to the
+        registry; the streaming path publishes per-batch throughput /
+        drift / cache metrics. Results are bit-identical with obs on
+        or off.
+
+    After an engine-path :meth:`fit`, ``stats_`` holds the
+    :class:`repro.core.engine.EngineStats` (telemetry ring included
+    when ``obs`` is enabled); ``None`` otherwise.
     """
 
     def __init__(self, n_clusters: int, algorithm: str = "yinyang",
                  n_groups: int | None = None, init: str = "k-means++",
                  max_iters: int = 100, tol: float = 1e-4, seed: int = 0,
                  engine: str | None = None, decay: float = 1.0,
-                 tune: str = "auto"):
+                 tune: str = "auto", obs=None):
         if algorithm not in ("lloyd", "hamerly", "yinyang"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
         if engine is not None and engine not in ("auto", "lloyd") \
@@ -83,6 +94,8 @@ class KMeans:
         self.engine = engine
         self.decay = decay
         self.tune = tune
+        self.obs = obs
+        self.stats_: _engine.EngineStats | None = None
         self.result_: _km.KMeansResult | None = None
         self._stream = None
         self._assign_tables = None  # cached (groups, members, gsize, g)
@@ -103,6 +116,7 @@ class KMeans:
         weights = None if sample_weight is None else \
             jnp.asarray(sample_weight, jnp.float32)
         init_c = self._init_centroids(points)
+        self.stats_ = None        # only engine-path fits produce stats
         if self.algorithm == "lloyd":
             res = _km.lloyd(points, init_c, self.max_iters, self.tol,
                             weights=weights)
@@ -113,10 +127,12 @@ class KMeans:
                                   max_iters=self.max_iters, tol=self.tol,
                                   weights=weights)
             else:
-                res = _engine.fit(points, init_c, n_groups=n_groups,
+                out = _engine.fit(points, init_c, n_groups=n_groups,
                                   max_iters=self.max_iters, tol=self.tol,
                                   backend=self.engine, tune=self.tune,
-                                  sample_weight=weights)
+                                  sample_weight=weights, obs=self.obs,
+                                  return_stats=True)
+                res, self.stats_ = out
         self.result_ = jax.tree.map(jax.device_get, res)
         self._stream = None       # a batch fit supersedes any stream state
         self._assign_tables = None
@@ -155,7 +171,8 @@ class KMeans:
                 else self.n_groups
             self._stream = _streaming.StreamingKMeans(
                 self.n_clusters, n_groups=n_groups, init=self.init,
-                decay=self.decay, seed=self.seed, tune=self.tune)
+                decay=self.decay, seed=self.seed, tune=self.tune,
+                obs=self.obs)
         s = self._stream.partial_fit(points, shard_id=shard_id,
                                      sample_weight=sample_weight)
         if s.initialized:

@@ -78,17 +78,19 @@ except ImportError:                      # jax >= 0.7
     _shard_map = jax.shard_map
     _SHARD_MAP_KW = {"check_vma": False}
 
+from ..obs import ring as _obs_ring
+from ..obs.metrics import normalize_obs
 from . import engine as _engine
-from .engine import (DEFAULT_CONFIG, EngineConfig, PassCore, Reducer,
-                     StreamStepOut, build_group_tables, cap_ladders,
-                     stream_bounds)
+from .engine import (DEFAULT_CONFIG, EngineConfig, EngineStats, PassCore,
+                     Reducer, StreamStepOut, build_group_tables,
+                     cap_ladders, stream_bounds)
 from .kmeans import KMeansResult, group_centroids
 
 
 def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
                      max_iters: int, tol: float, compress: bool = False,
                      opt_sq: bool = True, unroll_iters: int = 0,
-                     weighted: bool = False):
+                     weighted: bool = False, ring_iters: int = 0):
     """Build the jittable shard_map K-means fit with the masked-dense
     per-shard pass (AOT-lowerable for the production-mesh dry-run;
     executed by distributed_yinyang). The body is
@@ -106,13 +108,19 @@ def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
     unroll_iters>0: replace the while_loop with exactly that many python
     iterations of the SAME body — analysis artifacts only (XLA
     cost_analysis does not descend into while bodies; the N-vs-(N-1)
-    unrolled diff gives the exact per-iteration cost)."""
+    unrolled diff gives the exact per-iteration cost).
+
+    ``ring_iters>0`` carries the per-iteration telemetry ring through
+    the loop (``repro.obs.ring``); the sixth output is the PER-SHARD
+    ring stack (S, ring_iters, C), pre-reduction — join with
+    ``obs.ring.reduce_shard_rings``."""
     axes = tuple(axes)
     pspec = P(axes, None)
     core = PassCore(backend="oracle", k=k, n_groups=n_groups,
-                    opt_sq=opt_sq,
+                    opt_sq=opt_sq, ring_iters=ring_iters,
                     reducer=Reducer(axes=axes, compress=compress))
-    out_specs = (P(None, None), P(axes), P(), P(), P())
+    out_specs = (P(None, None), P(axes), P(), P(), P(),
+                 P(axes, None, None))
 
     in_specs = (pspec, P(None, None)) + ((P(axes),) if weighted else ())
 
@@ -124,12 +132,16 @@ def make_fit_sharded(mesh: Mesh, axes, k: int, n_groups: int,
         dummy_members = jnp.full((n_groups, 1), -1, jnp.int32)
         dummy_gsize = jnp.zeros((n_groups,), jnp.float32)
         if unroll_iters > 0:
-            return _engine.fit_core_unrolled(
+            out = _engine.fit_core_unrolled(
                 local_points, init_c, groups, dummy_members, dummy_gsize,
                 core=core, n_iters=unroll_iters, weights=weights)
-        return _engine.fit_core(
-            local_points, init_c, groups, dummy_members, dummy_gsize,
-            core=core, max_iters=max_iters, tol=tol, weights=weights)
+        else:
+            out = _engine.fit_core(
+                local_points, init_c, groups, dummy_members, dummy_gsize,
+                core=core, max_iters=max_iters, tol=tol, weights=weights)
+        # ring stays shard-local: add the leading shard axis the
+        # out_spec concatenates over
+        return out[:5] + (out[5][None],)
 
     return fit_sharded
 
@@ -139,12 +151,13 @@ def make_fit_sharded_engine(mesh: Mesh, axes, k: int, n_groups: int,
                             compress: bool = False,
                             config: EngineConfig | None = None,
                             max_branches: int = 12,
-                            weighted: bool = False):
+                            weighted: bool = False, ring_iters: int = 0):
     """Build the compact (capacity-bucketed) sharded fit.
 
     Returns a shard_map'd ``fit(local_points, valid[, weights], init_c,
     groups, members, gsize) -> (centroids, assignments, n_iters, evals,
-    inertia)`` where ``valid`` masks sentinel padding rows (see module
+    inertia, shard_rings)`` where ``valid`` masks sentinel padding rows
+    (see module
     docstring), ``groups`` is the (K,) centroid->group map and
     ``members``/``gsize`` the host-built group tables
     (``engine.build_group_tables`` — built OUTSIDE the sharded program,
@@ -163,6 +176,11 @@ def make_fit_sharded_engine(mesh: Mesh, axes, k: int, n_groups: int,
     gather-vs-GEMM crossover; ``cfg.refresh_in_pass`` places the
     own-distance refresh (full-shard rowwise vs on the compacted
     survivor buffer).
+
+    ``ring_iters>0`` enables the per-iteration telemetry ring; the
+    sixth output stacks the PER-SHARD rings (S, ring_iters, C) —
+    shard-local candidate counts / evals / ladder levels, the raw
+    material for the straggler watchdog and skew gauges.
     """
     axes = tuple(axes)
     cfg = config or DEFAULT_CONFIG
@@ -171,9 +189,10 @@ def make_fit_sharded_engine(mesh: Mesh, axes, k: int, n_groups: int,
     core = PassCore.from_config(
         cfg, backend="ladder", k=k, n_groups=n_groups,
         reducer=Reducer(axes=axes, compress=compress),
-        cap_ns=cap_ns, cap_gs=cap_gs)
+        cap_ns=cap_ns, cap_gs=cap_gs, ring_iters=ring_iters)
     pspec = P(axes, None)
-    out_specs = (P(None, None), P(axes), P(), P(), P())
+    out_specs = (P(None, None), P(axes), P(), P(), P(),
+                 P(axes, None, None))
 
     in_specs = (pspec, P(axes)) + ((P(axes),) if weighted else ()) + \
         (P(None, None), P(None), P(None, None), P(None))
@@ -183,9 +202,10 @@ def make_fit_sharded_engine(mesh: Mesh, axes, k: int, n_groups: int,
     def fit_sharded(local_points, valid, *rest):
         weights, rest = (rest[0], rest[1:]) if weighted else (None, rest)
         init_c, groups, members, gsize = rest
-        return _engine.fit_core(
+        out = _engine.fit_core(
             local_points, init_c, groups, members, gsize, core=core,
             max_iters=max_iters, tol=tol, weights=weights, valid=valid)
+        return out[:5] + (out[5][None],)
 
     return fit_sharded
 
@@ -200,18 +220,20 @@ def _mesh_shards(mesh: Mesh, axes) -> int:
 # pass instance per bucket level — seconds of XLA time on CPU).
 @functools.lru_cache(maxsize=64)
 def _jitted_fit_dense(mesh: Mesh, axes, k, n_groups, max_iters, tol,
-                      compress, weighted):
+                      compress, weighted, ring_iters=0):
     return jax.jit(make_fit_sharded(mesh, axes, k, n_groups, max_iters,
-                                    tol, compress, weighted=weighted))
+                                    tol, compress, weighted=weighted,
+                                    ring_iters=ring_iters))
 
 
 @functools.lru_cache(maxsize=64)
 def _jitted_fit_engine(mesh: Mesh, axes, k, n_groups, max_iters, tol,
-                       shard_n, compress, config, max_branches, weighted):
+                       shard_n, compress, config, max_branches, weighted,
+                       ring_iters=0):
     return jax.jit(make_fit_sharded_engine(
         mesh, axes, k, n_groups, max_iters, tol, shard_n=shard_n,
         compress=compress, config=config, max_branches=max_branches,
-        weighted=weighted))
+        weighted=weighted, ring_iters=ring_iters))
 
 
 def _pad_sharded(arr_np: np.ndarray, shards: int):
@@ -226,6 +248,45 @@ def _pad_sharded(arr_np: np.ndarray, shards: int):
     return arr_np, valid
 
 
+def _sharded_stats(backend, shard_rings, n_iters, *, n, k, cfg, obs_cfg,
+                   watchdog) -> EngineStats:
+    """Build the serializable :class:`EngineStats` of one sharded fit
+    from its drained per-shard rings; feed the straggler watchdog and
+    publish the skew gauge when configured. Host python on fetched
+    values — runs only under ``return_stats``/``obs``."""
+    shard_rings = np.asarray(jax.device_get(shard_rings))
+    shard_rings = shard_rings[:, :n_iters + 1]            # trim to fit
+    ring = _obs_ring.reduce_shard_rings(shard_rings)
+    skew = _obs_ring.shard_skew(shard_rings)
+    stats = EngineStats(
+        backend=backend, n_iters=n_iters, host_syncs=1, n_points=n,
+        config=cfg.to_dict() if cfg is not None else {},
+        ring=ring, init_evals=float(n) * k, shard_rings=shard_rings,
+        shard_skew=skew, caps_history=_obs_ring.caps_from_ring(ring))
+    per_shard_work = shard_rings[:, :, _obs_ring.COL_EVALS]    # (S, R)
+    if watchdog is not None:
+        for t in range(per_shard_work.shape[1]):
+            watchdog.observe_shards(t, per_shard_work[:, t])
+    if obs_cfg is not None:
+        reg = obs_cfg.resolve_registry()
+        labels = {"backend": backend}
+        hist = reg.histogram("dist_shard_skew",
+                             "per-iteration max/mean work skew",
+                             labels=labels,
+                             buckets=(1.0, 1.1, 1.25, 1.5, 2.0, 4.0, 8.0))
+        for s in skew:
+            hist.observe(float(s))
+        reg.gauge("dist_last_shard_skew", "final-iteration work skew",
+                  labels=labels).set(float(skew[-1]) if len(skew) else 1.0)
+        reg.gauge("dist_last_n_iters", "iterations of the last sharded "
+                  "fit", labels=labels).set(float(n_iters))
+        reg.log_event("distributed_fit", backend=backend,
+                      n_iters=n_iters, n_points=n,
+                      shards=int(shard_rings.shape[0]),
+                      telemetry=stats.telemetry())
+    return stats
+
+
 def distributed_yinyang(points, init_centroids, mesh: Mesh,
                         axes: Sequence[str] = ("data",),
                         n_groups: int | None = None,
@@ -234,7 +295,8 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
                         config: EngineConfig | None = None,
                         tune: str = "auto",
                         max_branches: int = 12,
-                        sample_weight=None) -> KMeansResult:
+                        sample_weight=None, return_stats: bool = False,
+                        obs=None, watchdog=None):
     """Run filtered K-means with points sharded over ``axes`` of ``mesh``.
 
     ``backend="compact"`` (default) runs the engine's two-level
@@ -255,6 +317,17 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
     ``points`` may be a host array (it is sharded — and, on the compact
     path, padded to the shard lattice — on entry) or an already-sharded
     jax.Array with the right layout.
+
+    ``return_stats=True`` returns ``(result, EngineStats)`` with the
+    drained telemetry: the reduced per-iteration ring, the raw
+    per-shard ``shard_rings`` and the per-iteration ``shard_skew``
+    (max/mean work imbalance — the straggler signal under lockstep
+    SPMD). ``obs`` additionally publishes skew gauges and a
+    ``distributed_fit`` event to the metrics registry
+    (:mod:`repro.obs`); ``watchdog`` feeds each iteration's per-shard
+    work into a :class:`repro.runtime.StragglerWatchdog` via
+    ``observe_shards``. Enabling any of these changes dispatch only —
+    results stay bit-identical.
     """
     if backend not in ("compact", "dense"):
         raise ValueError(f"unknown distributed backend {backend!r}; "
@@ -272,6 +345,10 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
     weighted = sample_weight is not None
     w_np = None if sample_weight is None else \
         np.asarray(jax.device_get(sample_weight), np.float32)
+    obs_cfg = normalize_obs(obs)
+    want_stats = return_stats or obs_cfg is not None or \
+        watchdog is not None
+    ring_iters = int(max_iters) + 1 if want_stats else 0
 
     shard = NamedSharding(mesh, P(axes, None))
     shard1 = NamedSharding(mesh, P(axes))
@@ -286,15 +363,22 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
                 f"shards")
         fit_sharded = _jitted_fit_dense(mesh, axes, k, n_groups,
                                         int(max_iters), float(tol),
-                                        bool(compress), weighted)
+                                        bool(compress), weighted,
+                                        ring_iters)
         points = jax.device_put(points, shard)
         init_d = jax.device_put(init_c, repl)
         args = (points, init_d)
         if weighted:
             args = (points, init_d,
                     jax.device_put(jnp.asarray(w_np), shard1))
-        c, a, i, evals, inertia = fit_sharded(*args)
-        return KMeansResult(c, a, i, evals, inertia)
+        c, a, i, evals, inertia, rings = fit_sharded(*args)
+        result = KMeansResult(c, a, i, evals, inertia)
+        if not want_stats:
+            return result
+        stats = _sharded_stats("dense", rings, int(i), n=n, k=k,
+                               cfg=config, obs_cfg=obs_cfg,
+                               watchdog=watchdog)
+        return (result, stats) if return_stats else result
 
     n, d = points.shape
     if n % shards:
@@ -321,7 +405,7 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
 
     fit_sharded = _jitted_fit_engine(
         mesh, axes, k, n_groups, int(max_iters), float(tol), shard_n,
-        bool(compress), cfg, int(max_branches), weighted)
+        bool(compress), cfg, int(max_branches), weighted, ring_iters)
     args = [jax.device_put(pts_in, shard),
             jax.device_put(valid_np, shard1)]
     if weighted:
@@ -330,8 +414,13 @@ def distributed_yinyang(points, init_centroids, mesh: Mesh,
              jax.device_put(groups, repl),
              jax.device_put(members, repl),
              jax.device_put(gsize, repl)]
-    c, a, i, evals, inertia = fit_sharded(*args)
-    return KMeansResult(c, a[:n], i, evals, inertia)
+    c, a, i, evals, inertia, rings = fit_sharded(*args)
+    result = KMeansResult(c, a[:n], i, evals, inertia)
+    if not want_stats:
+        return result
+    stats = _sharded_stats("compact", rings, int(i), n=n, k=k, cfg=cfg,
+                           obs_cfg=obs_cfg, watchdog=watchdog)
+    return (result, stats) if return_stats else result
 
 
 def _resolve_sharded_config(points, init_c, mesh, axes, *, shard_n, k, d,

@@ -106,7 +106,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback
 
+from ..obs import ring as _obs_ring
+from ..obs.metrics import normalize_obs
+from ..obs.ring import N_COUNTERS, RING_COLUMNS
 from .distances import (pairwise_dists, pairwise_sq_dists, row_norms_sq,
                         rowwise_dists)
 from .kmeans import (EvalCount, KMeansResult, _init_filter_state,
@@ -367,8 +371,9 @@ def move_and_bounds(points, centroids, assignments, ub, lb, groups,
     Returns a :class:`MoveOut`.
     """
     sums, bcounts = centroid_sums(points, assignments, k, weights=weights)
-    sums = reducer.sums(sums)
-    bcounts = reducer.add(bcounts)
+    with jax.named_scope("kpynq/reduce"):
+        sums = reducer.sums(sums)
+        bcounts = reducer.add(bcounts)
     new_c, new_counts = update.apply(sums, bcounts, centroids, counts,
                                      decay)
     new_c2 = row_norms_sq(new_c)                       # once per iteration
@@ -383,15 +388,16 @@ def move_and_bounds(points, centroids, assignments, ub, lb, groups,
     glb = jnp.min(lb_dec, axis=1)
     maybe = ub > glb
     if refresh:
-        if x2 is None:
-            d_own = rowwise_dists(points, new_c[assignments])
-        else:
-            own = new_c[assignments]
-            d_own = jnp.sqrt(jnp.maximum(
-                x2 - 2.0 * jnp.sum(points.astype(jnp.float32) * own,
-                                   axis=-1) + new_c2[assignments], 0.0))
-        ub_t = jnp.where(maybe, d_own, ub)
-        need = ub_t > glb
+        with jax.named_scope("kpynq/refresh"):
+            if x2 is None:
+                d_own = rowwise_dists(points, new_c[assignments])
+            else:
+                own = new_c[assignments]
+                d_own = jnp.sqrt(jnp.maximum(
+                    x2 - 2.0 * jnp.sum(points.astype(jnp.float32) * own,
+                                       axis=-1) + new_c2[assignments], 0.0))
+            ub_t = jnp.where(maybe, d_own, ub)
+            need = ub_t > glb
     else:
         ub_t = ub
         need = maybe
@@ -791,6 +797,8 @@ class EngineCarry(NamedTuple):
                               # as observed by the LAST executed pass
     shift: jnp.ndarray        # f32 max centroid drift
     evals: EvalCount
+    ring: jnp.ndarray         # (ring_iters, N_COUNTERS) telemetry ring
+                              # (see repro.obs.ring); (0, C) when off
 
 
 @dataclasses.dataclass
@@ -804,7 +812,17 @@ class EngineStats:
     construction (it is structural, not a runtime counter;
     ``tests/test_tune.py`` verifies it by counting real
     ``row_norms_sq`` calls); ``config`` is the resolved
-    :class:`EngineConfig` actually used."""
+    :class:`EngineConfig` actually used.
+
+    With observability enabled (``fit(obs=...)``) the stats carry the
+    drained telemetry ring: ``ring`` is the trimmed
+    ``(n_iters + 1, C)`` numpy buffer (column layout ``ring_columns``
+    = :data:`repro.obs.ring.RING_COLUMNS`; final row = epilogue),
+    ``init_evals`` the distance evals charged at filter-state init so
+    ``init_evals + ring[:, evals].sum() == result.distance_evals``
+    exactly. The distributed driver additionally fills
+    ``shard_rings`` (S, n_iters + 1, C) — per-shard, pre-reduction —
+    and ``shard_skew`` (per-iteration max/mean work imbalance)."""
     backend: str = ""
     n_iters: int = 0
     host_syncs: int = 0
@@ -813,6 +831,49 @@ class EngineStats:
     use_groups: list = dataclasses.field(default_factory=list)
     x2_evals: int = 0
     config: dict = dataclasses.field(default_factory=dict)
+    n_points: int = 0
+    ring: np.ndarray | None = None
+    ring_columns: tuple = RING_COLUMNS
+    init_evals: float = 0.0
+    shard_rings: np.ndarray | None = None
+    shard_skew: np.ndarray | None = None
+
+    def telemetry(self) -> dict | None:
+        """Headline ring summary (iters, mean candidate fraction, total
+        evals, ...) — what the benchmark records per dataset. ``None``
+        when the fit ran without the ring."""
+        if self.ring is None:
+            return None
+        out = _obs_ring.summarize_ring(self.ring, self.n_points,
+                                       init_evals=self.init_evals)
+        if self.shard_skew is not None and len(self.shard_skew):
+            out["mean_shard_skew"] = float(np.mean(self.shard_skew))
+            out["max_shard_skew"] = float(np.max(self.shard_skew))
+        return out
+
+    def to_dict(self) -> dict:
+        """JSON-serializable view (numpy rings -> nested lists), for
+        event logs / benchmark payloads."""
+        out = {
+            "backend": self.backend,
+            "n_iters": int(self.n_iters),
+            "host_syncs": int(self.host_syncs),
+            "bucket_switches": int(self.bucket_switches),
+            "caps_history": [list(c) for c in self.caps_history],
+            "use_groups": [bool(u) for u in self.use_groups],
+            "x2_evals": int(self.x2_evals),
+            "config": dict(self.config),
+            "n_points": int(self.n_points),
+        }
+        if self.ring is not None:
+            out["ring_columns"] = list(self.ring_columns)
+            out["ring"] = np.asarray(self.ring, np.float64).tolist()
+            out["init_evals"] = float(self.init_evals)
+            out["telemetry"] = self.telemetry()
+        if self.shard_skew is not None:
+            out["shard_skew"] = np.asarray(
+                self.shard_skew, np.float64).tolist()
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -853,6 +914,13 @@ class PassCore:
     # opt_sq=False exists for analysis artifacts only (the dry-run's
     # A/B of the squared-distance reductions); every driver runs True
     opt_sq: bool = True
+    # telemetry-ring rows carried through the loop (0 = ring disabled;
+    # the drivers set max_iters + 1 so the epilogue gets the last row).
+    # Shape/dispatch only — the ring never feeds back into the fit.
+    ring_iters: int = 0
+    # emit each ring row as it is written via io_callback (see
+    # repro.obs.ring.add_ring_listener); requires ring_iters > 0
+    live_drain: bool = False
 
     @classmethod
     def from_config(cls, cfg: EngineConfig, *, backend: str, k: int,
@@ -906,6 +974,18 @@ class PassCore:
             group_gather_factor=self.group_gather_factor)
 
 
+def _ring_caps(core: PassCore, level_n, level_g, n: int):
+    """The (cap_n, cap_g) the candidate pass actually ran at, as fp32
+    ring values: the static caps on the compact backend, the traced
+    lattice level on the ladder, N/G for the non-compacting passes."""
+    if core.backend == "compact":
+        return jnp.float32(core.cap_n), jnp.float32(core.cap_g)
+    if core.backend == "ladder":
+        return (jnp.take(jnp.asarray(core.cap_ns, jnp.float32), level_n),
+                jnp.take(jnp.asarray(core.cap_gs, jnp.float32), level_g))
+    return jnp.float32(n), jnp.float32(core.n_groups)
+
+
 def _loop_body(core: PassCore, points, weights, groups, members, gsize):
     """THE candidate-pass loop body (pending candidate pass at the top,
     then move + bound maintenance through ``core.reducer``) — the one
@@ -913,22 +993,51 @@ def _loop_body(core: PassCore, points, weights, groups, members, gsize):
     :func:`fit_core`, python-unrolled in the dry-run analysis variant.
     State is ``(EngineCarry, level_n, level_g)``; the ladder backend
     transitions its levels shard-locally via :func:`select_bucket`,
-    every other backend carries constant zeros."""
+    every other backend carries constant zeros.
+
+    With ``core.ring_iters > 0`` each body additionally writes one row
+    of the telemetry ring (``repro.obs.ring`` layout) at its iteration
+    index — a (C,) scatter into loop-carried state, no host traffic;
+    ``core.live_drain`` adds a one-way ``io_callback`` per iteration."""
 
     def body(state):
         c, ln, lg = state
-        new_as, new_ub, new_lb, pairs, gmax = core.candidate_pass(
-            points, c.centroids, c.assignments, c.ub, c.lb, c.need,
-            groups, members, gsize, x2=c.x2, c2=c.c2, level_n=ln,
-            level_g=lg)
-        mv = move_and_bounds(
-            points, c.centroids, new_as, new_ub, new_lb, groups,
-            k=core.k, n_groups=core.n_groups, reducer=core.reducer,
-            weights=weights, x2=c.x2, refresh=core.refresh_in_move)
+        with jax.named_scope("kpynq/candidate_pass"):
+            new_as, new_ub, new_lb, pairs, gmax = core.candidate_pass(
+                points, c.centroids, c.assignments, c.ub, c.lb, c.need,
+                groups, members, gsize, x2=c.x2, c2=c.c2, level_n=ln,
+                level_g=lg)
+        with jax.named_scope("kpynq/move_and_bounds"):
+            mv = move_and_bounds(
+                points, c.centroids, new_as, new_ub, new_lb, groups,
+                k=core.k, n_groups=core.n_groups, reducer=core.reducer,
+                weights=weights, x2=c.x2, refresh=core.refresh_in_move)
         n_cand = jnp.sum(mv.need.astype(jnp.int32))
+        ring = c.ring
+        if core.ring_iters:
+            with jax.named_scope("kpynq/ring_write"):
+                cap_n, cap_g = _ring_caps(core, ln, lg, points.shape[0])
+                proxy = mv.ub * mv.ub
+                if weights is not None:
+                    proxy = proxy * weights
+                row = jnp.stack([
+                    n_cand.astype(jnp.float32),
+                    gmax.astype(jnp.float32),
+                    mv.shift,
+                    pairs + mv.tightened,
+                    cap_n,
+                    cap_g,
+                    jnp.sum(proxy),
+                    mv.tightened,
+                ])
+                ring = ring.at[c.iteration].set(row)
+            if core.live_drain:
+                io_callback(_obs_ring.emit_ring_row, None, c.iteration,
+                            row, ordered=False)
         carry = EngineCarry(c.iteration + 1, mv.centroids, mv.c2, new_as,
                             mv.ub, mv.lb, c.x2, mv.need, n_cand, gmax,
-                            mv.shift, c.evals.add(pairs).add(mv.tightened))
+                            mv.shift, c.evals.add(pairs).add(mv.tightened),
+                            ring)
         if core.backend == "ladder":
             ln, lg = select_bucket(n_cand, gmax, ln, lg,
                                    cap_ns=core.cap_ns, cap_gs=core.cap_gs,
@@ -1005,11 +1114,17 @@ def _epilogue_pass(core: PassCore, points, weights, valid, carry, groups,
     """Final pending candidate pass + (weighted) inertia — the traced
     tail shared by `_epilogue` and :func:`fit_core`. ``valid`` masks
     sentinel padding rows of an uneven sharded fit (their assignment is
-    K; clip the gather and zero their cost)."""
-    new_as, _, _, pairs, _ = core.candidate_pass(
-        points, carry.centroids, carry.assignments, carry.ub, carry.lb,
-        carry.need, groups, members, gsize, x2=carry.x2, c2=carry.c2,
-        level_n=level_n, level_g=level_g)
+    K; clip the gather and zero their cost).
+
+    Returns ``(new_as, evals, inertia, ring)`` — the ring gains its
+    final row at index ``carry.iteration``: the epilogue pass's evals
+    and, in the inertia-proxy column, the EXACT (shard-local,
+    pre-reduction) inertia."""
+    with jax.named_scope("kpynq/candidate_pass"):
+        new_as, _, _, pairs, _ = core.candidate_pass(
+            points, carry.centroids, carry.assignments, carry.ub, carry.lb,
+            carry.need, groups, members, gsize, x2=carry.x2, c2=carry.c2,
+            level_n=level_n, level_g=level_g)
     evals = core.reducer.add(carry.evals.add(pairs).total())
     own = carry.centroids[jnp.minimum(new_as, core.k - 1)]
     d = rowwise_dists(points, own)
@@ -1018,8 +1133,28 @@ def _epilogue_pass(core: PassCore, points, weights, valid, carry, groups,
         d2 = jnp.where(valid, d2, 0.0)
     if weights is not None:
         d2 = d2 * weights
-    inertia = core.reducer.add(jnp.sum(d2))
-    return new_as, evals, inertia
+    local_inertia = jnp.sum(d2)
+    inertia = core.reducer.add(local_inertia)
+    ring = carry.ring
+    if core.ring_iters:
+        with jax.named_scope("kpynq/ring_write"):
+            cap_n, cap_g = _ring_caps(core, level_n, level_g,
+                                      points.shape[0])
+            row = jnp.stack([
+                carry.n_cand.astype(jnp.float32),
+                carry.gmax.astype(jnp.float32),
+                carry.shift,
+                pairs,
+                cap_n,
+                cap_g,
+                local_inertia,
+                jnp.float32(0.0),
+            ])
+            ring = ring.at[carry.iteration].set(row)
+        if core.live_drain:
+            io_callback(_obs_ring.emit_ring_row, None, carry.iteration,
+                        row, ordered=False)
+    return new_as, evals, inertia, ring
 
 
 @functools.partial(jax.jit, static_argnames=("core",))
@@ -1041,10 +1176,13 @@ def fit_core(points, init_c, groups, members, gsize, *, core: PassCore,
     rows are taken back out of the eval count); ``weights`` are
     per-point sample weights (see :func:`move_and_bounds`).
 
-    Returns ``(centroids, assignments, n_iters, evals, inertia)``.
+    Returns ``(centroids, assignments, n_iters, evals, inertia, ring)``
+    — the ring is the (core.ring_iters, C) telemetry buffer (shape
+    (0, C) when disabled), SHARD-LOCAL under ``shard_map``.
     """
     k = core.k
-    carry = _init_carry(points, init_c, groups, n_groups=core.n_groups)
+    carry = _init_carry(points, init_c, groups, n_groups=core.n_groups,
+                        ring_iters=core.ring_iters)
     if valid is not None:
         pad = jnp.sum(1.0 - valid.astype(jnp.float32))
         carry = carry._replace(
@@ -1056,10 +1194,10 @@ def fit_core(points, init_c, groups, members, gsize, *, core: PassCore,
     carry, ln, lg = jax.lax.while_loop(
         _loop_cond(core, max_iters=max_iters, tol=tol),
         _loop_body(core, points, weights, groups, members, gsize), state)
-    new_as, evals, inertia = _epilogue_pass(
+    new_as, evals, inertia, ring = _epilogue_pass(
         core, points, weights, valid, carry, groups, members, gsize, ln,
         lg)
-    return carry.centroids, new_as, carry.iteration, evals, inertia
+    return carry.centroids, new_as, carry.iteration, evals, inertia, ring
 
 
 def fit_core_unrolled(points, init_c, groups, members, gsize, *,
@@ -1069,23 +1207,26 @@ def fit_core_unrolled(points, init_c, groups, members, gsize, *,
     analysis artifacts only (XLA cost_analysis does not descend into
     while bodies; the N-vs-(N-1) unrolled diff gives the exact
     per-iteration cost)."""
-    carry = _init_carry(points, init_c, groups, n_groups=core.n_groups)
+    carry = _init_carry(points, init_c, groups, n_groups=core.n_groups,
+                        ring_iters=core.ring_iters)
     state = (carry, jnp.int32(0), jnp.int32(0))
     body = _loop_body(core, points, weights, groups, members, gsize)
     for _ in range(n_iters):
         state = body(state)
     carry, ln, lg = state
-    new_as, evals, inertia = _epilogue_pass(
+    new_as, evals, inertia, ring = _epilogue_pass(
         core, points, weights, None, carry, groups, members, gsize, ln,
         lg)
-    return carry.centroids, new_as, carry.iteration, evals, inertia
+    return carry.centroids, new_as, carry.iteration, evals, inertia, ring
 
 
-@functools.partial(jax.jit, static_argnames=("n_groups",))
-def _init_carry(points, init_c, groups, *, n_groups):
+@functools.partial(jax.jit, static_argnames=("n_groups", "ring_iters"))
+def _init_carry(points, init_c, groups, *, n_groups, ring_iters=0):
     """Fused setup: point norms (THE once-per-fit ``||x||^2``), initial
     filter state, and the initial loop carry — one dispatch instead of
-    the ~8 eager ops the old driver issued per fit."""
+    the ~8 eager ops the old driver issued per fit. ``ring_iters``
+    sizes the telemetry ring (0 = disabled, a (0, C) array that makes
+    every ring op in the loop free)."""
     n = points.shape[0]
     x2 = row_norms_sq(points)
     c2 = row_norms_sq(init_c.astype(jnp.float32))
@@ -1094,7 +1235,8 @@ def _init_carry(points, init_c, groups, *, n_groups):
     return EngineCarry(
         jnp.int32(0), state0.centroids, c2, state0.assignments, state0.ub,
         state0.lb, x2, jnp.zeros((n,), bool), jnp.int32(0), jnp.int32(0),
-        jnp.float32(jnp.inf), state0.distance_evals)
+        jnp.float32(jnp.inf), state0.distance_evals,
+        jnp.zeros((ring_iters, N_COUNTERS), jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("core", "max_iters", "tol"))
@@ -1202,13 +1344,38 @@ def _resolve_config(*, backend, tile_n, min_cap, chunk, config, tune,
     return cfg, resolved
 
 
+def _publish_fit(obs_cfg, stats: EngineStats, result) -> None:
+    """Publish one finished fit into the configured metrics registry —
+    counters + an ``engine_fit`` event carrying the ring summary. Host
+    python on already-fetched values; runs only under ``obs=``."""
+    reg = obs_cfg.resolve_registry()
+    labels = {"backend": stats.backend}
+    reg.counter("engine_fits_total", "completed engine fits",
+                labels=labels).inc()
+    reg.counter("engine_distance_evals_total",
+                "distance evaluations across fits", labels=labels).inc(
+        float(result.distance_evals))
+    reg.gauge("engine_last_n_iters", "iterations of the last fit",
+              labels=labels).set(float(stats.n_iters))
+    reg.gauge("engine_last_host_syncs", "host syncs of the last fit",
+              labels=labels).set(float(stats.host_syncs))
+    evt = {"backend": stats.backend, "n_iters": stats.n_iters,
+           "host_syncs": stats.host_syncs, "n_points": stats.n_points,
+           "distance_evals": float(result.distance_evals),
+           "inertia": float(result.inertia)}
+    tel = stats.telemetry()
+    if tel is not None:
+        evt["telemetry"] = tel
+    reg.log_event("engine_fit", **evt)
+
+
 def fit(points, init_centroids, *, n_groups: int | None = None,
         max_iters: int = 100, tol: float = 1e-4, backend: str = "auto",
         tile_n: int | None = None, min_cap: int | None = None,
         chunk: int | None = None, interpret: bool | None = None,
         max_bucket_switches: int = 32, return_stats: bool = False,
         config: EngineConfig | None = None, tune: str = "auto",
-        sample_weight=None):
+        sample_weight=None, obs=None):
     """Run filtered K-means fully device-resident.
 
     See the module docstring for backend semantics. ``interpret=None``
@@ -1229,6 +1396,15 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     are weight-independent). ``None`` compiles the exact pre-weight
     program; uniform weights of 1.0 are bit-identical to it.
 
+    ``obs``: observability switch (see :mod:`repro.obs`) — ``None`` /
+    ``False`` disabled (the exact pre-obs program compiles), ``True``
+    defaults, a ``MetricsRegistry`` or ``ObsConfig`` for control. When
+    enabled, the per-iteration telemetry ring rides the loop carry and
+    is drained ONCE at exit into ``EngineStats.ring``
+    (``host_syncs`` is unchanged — the drain rides the exit fetch),
+    and the fit publishes counters + an ``engine_fit`` event into the
+    registry. Results are bit-identical with obs on or off.
+
     Returns a :class:`~repro.core.kmeans.KMeansResult`; with
     ``return_stats=True`` returns ``(result, EngineStats)``.
     """
@@ -1247,6 +1423,9 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     n, d = points.shape
     weights = None if sample_weight is None else \
         jnp.asarray(sample_weight, jnp.float32)
+    obs_cfg = normalize_obs(obs)
+    ring_iters = int(max_iters) + 1 if obs_cfg and obs_cfg.ring else 0
+    live_drain = bool(obs_cfg and obs_cfg.live_drain and ring_iters)
 
     if tune == "force" and config is None:
         from .. import tune as _tune
@@ -1260,12 +1439,17 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     if backend == "lloyd":
         res = _lloyd_jit(points, init_c, weights, max_iters=int(max_iters),
                          tol=float(tol))
-        if not return_stats:
+        if not return_stats and obs_cfg is None:
             return res              # keep the tiny-problem route lean:
                                     # no stats blocking / dict building
         stats = EngineStats(backend="lloyd", n_iters=int(res.n_iters),
-                            host_syncs=1, config=cfg.to_dict())
-        return res, stats
+                            host_syncs=1, config=cfg.to_dict(),
+                            n_points=n)
+        if obs_cfg is not None:
+            # the dense loop has no filter pass, hence no ring — the
+            # registry still gets the fit event/counters
+            _publish_fit(obs_cfg, stats, res)
+        return (res, stats) if return_stats else res
     if interpret is None:
         interpret = backend == "pallas" and jax.default_backend() != "tpu"
     if n_groups is None:
@@ -1273,7 +1457,8 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     n_groups = int(min(n_groups, k))
     tol = float(tol)
 
-    stats = EngineStats(backend=backend, x2_evals=1, config=cfg.to_dict())
+    stats = EngineStats(backend=backend, x2_evals=1, config=cfg.to_dict(),
+                        n_points=n)
     cap_floor = min(cfg.min_cap, n)
 
     def _core(cap_n, cap_g, l_max):
@@ -1283,13 +1468,20 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
             if backend == "compact" else None
         return PassCore.from_config(
             cfg, backend=backend, k=k, n_groups=n_groups, cap_n=cap_n,
-            cap_g=cap_g, use_groups=ug, interpret=bool(interpret))
+            cap_g=cap_g, use_groups=ug, interpret=bool(interpret),
+            ring_iters=ring_iters, live_drain=live_drain)
+
+    def _drain_ring(ring):
+        # one device_get at fit exit — rides the exit fetch the driver
+        # does anyway, so host_syncs stays exactly as without obs
+        stats.ring = np.asarray(jax.device_get(ring))[:stats.n_iters + 1]
+        stats.init_evals = float(n) * k
 
     if n <= 4 * cap_floor:
         # small problem: eager setup + bucket churn costs more than the
         # whole fit — run the fully-fused single-program path
         core = _core(n, n_groups, k)
-        c, a, it, evals, inertia = _fit_fused(
+        c, a, it, evals, inertia, ring = _fit_fused(
             points, init_c, weights, core=core, max_iters=int(max_iters),
             tol=tol)
         stats.host_syncs = 1
@@ -1298,6 +1490,10 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
             stats.caps_history.append((n, n_groups))
             stats.use_groups.append(bool(core.use_groups))
         result = KMeansResult(c, a, it, evals, inertia)
+        if ring_iters:
+            _drain_ring(ring)
+        if obs_cfg is not None:
+            _publish_fit(obs_cfg, stats, result)
         return (result, stats) if return_stats else result
 
     groups = group_centroids(init_c, n_groups)
@@ -1308,7 +1504,8 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
     members, gsize = build_group_tables(groups_np, n_groups)
     l_max = int(members.shape[1])
 
-    carry = _init_carry(points, init_c, groups, n_groups=n_groups)
+    carry = _init_carry(points, init_c, groups, n_groups=n_groups,
+                        ring_iters=ring_iters)
 
     # start tiny: the first loop body's pending candidate pass is empty
     # (carry.need = 0), so a full-capacity program would burn one whole
@@ -1351,12 +1548,16 @@ def fit(points, init_centroids, *, n_groups: int | None = None,
         ecap_g = _bucket_cap(int(gm), 1, n_groups)
     else:
         ecap_n, ecap_g = n, n_groups
-    assignments, evals, inertia = _epilogue(
+    assignments, evals, inertia, ring = _epilogue(
         points, weights, carry, groups, members, gsize,
         core=_core(ecap_n, ecap_g, l_max))
 
     result = KMeansResult(carry.centroids, assignments, carry.iteration,
                           evals, inertia)
+    if ring_iters:
+        _drain_ring(ring)
+    if obs_cfg is not None:
+        _publish_fit(obs_cfg, stats, result)
     if return_stats:
         return result, stats
     return result

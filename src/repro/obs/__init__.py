@@ -1,0 +1,36 @@
+"""repro.obs — observability for the KPynq engine family.
+
+Three layers (see ``docs/observability.md``):
+
+* :mod:`repro.obs.ring` — the device-resident per-iteration telemetry
+  ring: layout constants, shard-ring reduction, summaries, the
+  live-drain listener registry. The device side lives in
+  ``repro.core.engine`` (``EngineCarry.ring``); this module owns the
+  host-side semantics.
+* :mod:`repro.obs.trace` — phase tracing: ``jax.named_scope`` device
+  phases (annotated in the engine), :func:`profile` for Perfetto
+  traces, :func:`span` for host wall-clock spans.
+* :mod:`repro.obs.metrics` — the metrics registry
+  (counter/gauge/histogram + JSONL event log) with Prometheus-text and
+  JSONL exporters, published by all three fit drivers.
+
+This package deliberately imports nothing from ``repro.core`` so the
+engine can import it without cycles.
+"""
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      ObsConfig, default_registry, normalize_obs,
+                      provenance, reset_default_registry)
+from .ring import (N_COUNTERS, RING_COLUMNS, add_ring_listener,
+                   caps_from_ring, format_ring_table, reduce_shard_rings,
+                   remove_ring_listener, shard_skew, summarize_ring)
+from .trace import profile, span
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "ObsConfig",
+    "default_registry", "normalize_obs", "provenance",
+    "reset_default_registry",
+    "N_COUNTERS", "RING_COLUMNS", "add_ring_listener", "caps_from_ring",
+    "format_ring_table", "reduce_shard_rings", "remove_ring_listener",
+    "shard_skew", "summarize_ring",
+    "profile", "span",
+]

@@ -1,0 +1,86 @@
+"""Phase tracing: wall-clock spans + Perfetto profiles.
+
+Two granularities:
+
+* **Device phases** — the engine's loop body is annotated with
+  ``jax.named_scope`` spans (``kpynq/candidate_pass``,
+  ``kpynq/move_and_bounds``, ``kpynq/refresh``, ``kpynq/reduce``), so
+  any profiler view of the compiled program attributes time to engine
+  phases instead of a wall of fused HLO. :func:`profile` wraps a
+  callable in ``jax.profiler.trace`` and returns the directory holding
+  the Perfetto trace (open at https://ui.perfetto.dev, or feed to
+  TensorBoard's profile plugin).
+* **Host spans** — :func:`span` is a context manager timing a host
+  region into a registry histogram + event (used by ``tune.autotune``
+  around each measured candidate and by the benchmark harness around
+  each suite section), so "where did the wall-clock go" is answerable
+  from the same export as everything else.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import tempfile
+import time
+
+from .metrics import MetricsRegistry, default_registry
+
+# span-duration histogram buckets: micro-benchmarks to multi-minute fits
+SPAN_BUCKETS = (0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0,
+                30.0, 60.0, 300.0)
+
+
+@contextlib.contextmanager
+def span(name: str, registry: MetricsRegistry | None = None, **fields):
+    """Time a host-side region.
+
+    Records the duration into the ``span_seconds`` histogram (labelled
+    by span name) and appends a ``span`` event (with any extra
+    ``fields``) to the registry's event log. Yields a dict the caller
+    may add result fields to; they land in the same event.
+
+        with obs.span("tune.measure", backend="compact") as s:
+            t = measure(cfg)
+            s["seconds_measured"] = t
+    """
+    reg = registry or default_registry()
+    extra: dict = {}
+    t0 = time.perf_counter()
+    try:
+        yield extra
+    finally:
+        dt = time.perf_counter() - t0
+        reg.histogram("span_seconds", "host span durations",
+                      labels={"span": name},
+                      buckets=SPAN_BUCKETS).observe(dt)
+        # span's own keys win over caller fields (never a TypeError)
+        merged = {**fields, **extra, "name": name, "seconds": dt}
+        reg.log_event("span", **merged)
+
+
+def profile(fn, *args, trace_dir: str | None = None,
+            registry: MetricsRegistry | None = None, **kwargs):
+    """Run ``fn(*args, **kwargs)`` under ``jax.profiler.trace`` and
+    block on its output, so the trace covers the real device work.
+
+    Returns ``(result, trace_dir)``; the directory contains a
+    Perfetto-compatible trace (``plugins/profile/<run>/*.trace.json.gz``)
+    whose device timeline carries the engine's ``kpynq/*`` named-scope
+    phase annotations. ``trace_dir=None`` creates one under the system
+    temp dir. Also logged as a ``profile`` event in the registry so the
+    export names the artifact path.
+    """
+    import jax
+
+    if trace_dir is None:
+        trace_dir = tempfile.mkdtemp(prefix="kpynq_trace_")
+    os.makedirs(trace_dir, exist_ok=True)
+    t0 = time.perf_counter()
+    with jax.profiler.trace(str(trace_dir)):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(jax.tree.leaves(out))
+    dt = time.perf_counter() - t0
+    (registry or default_registry()).log_event(
+        "profile", trace_dir=str(trace_dir), seconds=dt,
+        fn=getattr(fn, "__name__", repr(fn)))
+    return out, str(trace_dir)

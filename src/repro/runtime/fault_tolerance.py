@@ -68,6 +68,33 @@ class StragglerWatchdog:
                 (1 - self.alpha) * self.ewma + self.alpha * dt
         return is_straggler
 
+    def observe_shards(self, step: int, times) -> list[int]:
+        """Per-shard variant: flag shards whose step time (or, under
+        lockstep SPMD where wall-clock is indistinguishable, per-shard
+        WORK from the telemetry ring's evals column — the distributed
+        driver feeds that) exceeds ``threshold x`` the cross-shard
+        median at this step. Returns the flagged shard indices; events
+        carry the shard id. The EWMA tracks the median directly (one
+        observation per step, outlier shards excluded by construction),
+        so ``observe`` and ``observe_shards`` can share a watchdog."""
+        import numpy as np
+
+        times = np.asarray(times, np.float64)
+        med = float(np.median(times))
+        flagged: list[int] = []
+        if med > 0:
+            for s, dt in enumerate(times):
+                if dt > self.threshold * med:
+                    evt = {"step": step, "shard": int(s),
+                           "dt": float(dt), "median": med}
+                    self.events.append(evt)
+                    flagged.append(int(s))
+                    if self.on_straggler:
+                        self.on_straggler(evt)
+            self.ewma = med if self.ewma is None else \
+                (1 - self.alpha) * self.ewma + self.alpha * med
+        return flagged
+
 
 class ResilientLoop:
     """Checkpoint/restart training driver."""

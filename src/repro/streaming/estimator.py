@@ -51,6 +51,8 @@ the normal step so their bounds enter the cache.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -60,6 +62,7 @@ from ..core.api import NotFittedError
 from ..core.engine import PassCore, _bucket_cap
 from ..core.init import kmeans_plusplus, random_init
 from ..core.kmeans import group_centroids
+from ..obs.metrics import normalize_obs
 from .state import (BoundCache, DriftLedger, ShardBounds, StreamStats,
                     inflate_bounds)
 
@@ -94,6 +97,13 @@ class StreamingKMeans:
         bound cache operate on the REDUCED (replicated) move, so the
         whole bound-carry machinery is unchanged. ``mesh=None``
         (default) keeps the single-device step.
+    obs : observability switch (see :mod:`repro.obs`) — when enabled,
+        each batch publishes points/s, batch wall-clock, cumulative
+        drift-ledger magnitude, bound-cache hit/miss counters and
+        reseeds to the metrics registry, plus one ``stream_batch``
+        event (batch size, candidate count, pairs scored, cache hit).
+        Pure host-side bookkeeping around the step's existing blocking
+        fetch — device programs and results are unchanged.
     tune : 'auto' | 'off' — consult the per-(platform, B, K, D)
         tuning cache (:mod:`repro.tune`) at cold-start time (B = the
         first batch's size) and adopt the tuned ``min_cap`` -> bucket
@@ -114,7 +124,7 @@ class StreamingKMeans:
                  drift_reset_factor: float = 8.0,
                  chunk: int | None = None,
                  tune: str = "auto",
-                 mesh=None, mesh_axes=("data",)):
+                 mesh=None, mesh_axes=("data",), obs=None):
         if init not in ("k-means++", "random"):
             raise ValueError(f"unknown init {init!r}")
         if not 0.0 < decay <= 1.0:
@@ -147,6 +157,7 @@ class StreamingKMeans:
         self._sharded_bounds = None       # built lazily per mesh
         self._sharded_updates: dict = {}  # (cap_n, cap_g) -> jitted step
 
+        self._obs = normalize_obs(obs)
         self.stats_ = StreamStats()
         self.ewa_inertia_: float | None = None
         self._ewa_alpha = 0.25
@@ -282,6 +293,7 @@ class StreamingKMeans:
                         group_gather_factor=self._ggf)
 
     def _step(self, pts_np: np.ndarray, sid, w_np=None) -> None:
+        t0 = time.perf_counter()
         b = pts_np.shape[0]
         g = self._g
         k = self.n_clusters
@@ -426,6 +438,41 @@ class StreamingKMeans:
         self._since_hit = np.where(bcounts_np > 0, 0, self._since_hit + 1)
         self._push_far(pts_np, ub_np)
         self._maybe_reseed()
+
+        if self._obs is not None:
+            # the step's device_get above already blocked, so this
+            # wall-clock covers the real device work of the batch
+            dt = time.perf_counter() - t0
+            self._publish_batch(b=b, dt=dt, sid=sid, n_cand=n_cand,
+                                pairs=float(pairs) + tightened,
+                                hit=entry is not None)
+
+    def _publish_batch(self, *, b, dt, sid, n_cand, pairs, hit) -> None:
+        """Per-batch metrics publication (``obs=`` enabled only)."""
+        reg = self._obs.resolve_registry()
+        st = self.stats_
+        reg.counter("stream_batches_total", "mini-batches processed").inc()
+        reg.counter("stream_points_total", "points processed").inc(b)
+        reg.histogram("stream_batch_seconds", "per-batch wall-clock",
+                      ).observe(dt)
+        reg.gauge("stream_points_per_s",
+                  "last batch's throughput").set(b / max(dt, 1e-9))
+        reg.gauge("stream_drift_magnitude",
+                  "cumulative drift-ledger centroid magnitude").set(
+            float(self._ledger.centroid.sum()))
+        reg.gauge("stream_cache_hits", "bound-cache hits").set(
+            st.cache_hits)
+        reg.gauge("stream_cache_misses", "bound-cache misses").set(
+            st.cache_misses)
+        reg.gauge("stream_reseeds", "dead-centroid reseeds").set(
+            st.reseeds)
+        reg.gauge("stream_ewa_inertia", "EWA per-point batch cost").set(
+            self.ewa_inertia_ or 0.0)
+        reg.log_event("stream_batch", batch=st.batches, size=b,
+                      seconds=dt, shard=sid, n_cand=int(n_cand),
+                      pairs=pairs, cache_hit=bool(hit),
+                      reseeds=st.reseeds,
+                      drift=float(self._ledger.centroid.sum()))
 
     # -- dead-centroid re-seeding ------------------------------------------
 

@@ -37,6 +37,10 @@ class StreamStats:
     init_batches: int = 0     # batches buffered for the cold-start init
     sharded_batches: int = 0  # batches run through the distributed step
 
+    def to_dict(self) -> dict:
+        """JSON-serializable view (event logs / benchmark payloads)."""
+        return dataclasses.asdict(self)
+
 
 @dataclasses.dataclass
 class ShardBounds:

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.engine import EngineConfig
+from ..obs.trace import span
 from .cache import TuneCache, default_cache
 from .signature import signature
 
@@ -198,7 +199,10 @@ def autotune(points, init_c, *, n_groups=None, max_iters: int = 50,
         if key not in memo:
             if len(memo) >= max_measurements:
                 return float("inf")
-            memo[key] = float(measure(cfg))
+            with span("tune.measure", sig=sig,
+                      backend=cfg.backend) as fields:
+                memo[key] = float(measure(cfg))
+                fields["best_s"] = memo[key]
             if verbose:
                 print(f"tune[{sig}] {cfg.backend} "
                       f"{memo[key] * 1e3:8.2f}ms  {cfg.to_dict()}")

@@ -18,3 +18,20 @@ def _isolated_tune_cache(tmp_path, monkeypatch):
     tune.set_default_cache(None)     # re-resolve under the tmp env var
     yield
     tune.set_default_cache(None)     # drop the tmp-backed singleton
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_xla_executable_maps():
+    """Drop compiled executables between test modules.
+
+    Every XLA:CPU compilation mmaps JIT code pages that live as long as
+    the executable does; a full-suite run accumulates tens of thousands
+    of mappings and a single process runs into ``vm.max_map_count``
+    (65530 by default) — at which point LLVM's mmap fails with ENOMEM
+    and the JIT segfaults. Tests never share compilations across module
+    boundaries, so clearing jit caches per module keeps the mapping
+    count bounded at no meaningful recompile cost.
+    """
+    yield
+    import jax
+    jax.clear_caches()

@@ -422,3 +422,58 @@ def test_reduced_dryrun_lowers_on_8_devices():
             assert cost.get("flops", 0) > 0
         print("DRYRUN-8DEV-OK")
     """)
+
+def test_distributed_stats_rings_skew_and_watchdog():
+    """Observability under real sharding: per-shard rings survive the
+    shard_map (one (R, C) ring per shard), the global evals invariant
+    reconciles exactly against the psum'd EvalCount, the skew gauge
+    reflects a deliberately imbalanced shard (uniform noise on shard 0
+    -> it does several times the median work -> the StragglerWatchdog
+    flags exactly that shard), and obs on/off stays bit-identical."""
+    _run("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import distributed_yinyang, kmeans_plusplus
+        from repro.data import make_points
+        from repro.obs import MetricsRegistry
+        from repro.obs.ring import COL_EVALS
+        from repro.runtime.fault_tolerance import StragglerWatchdog
+
+        mesh = jax.make_mesh((8,), ("data",))
+        kw = dict(n_groups=6, max_iters=30, tol=1e-5, backend="compact")
+
+        # balanced fit first: parity + invariant + serializable stats
+        pts_np, _, _ = make_points(4096, 16, 24, seed=0)
+        pts = jnp.asarray(pts_np)
+        init = kmeans_plusplus(jax.random.PRNGKey(1), pts, 24)
+        r_off = distributed_yinyang(pts, init, mesh, **kw)
+        reg = MetricsRegistry()
+        r_on, st = distributed_yinyang(pts, init, mesh,
+                                       return_stats=True, obs=reg, **kw)
+        assert np.array_equal(np.asarray(r_off.assignments),
+                              np.asarray(r_on.assignments))
+        assert float(r_off.inertia) == float(r_on.inertia)
+        assert st.shard_rings.shape[0] == 8
+        assert st.ring.shape[0] == int(r_on.n_iters) + 1
+        total = st.init_evals + float(np.sum(st.ring[:, COL_EVALS]))
+        assert total == float(r_on.distance_evals), (total,
+            float(r_on.distance_evals))
+        json.dumps(st.to_dict())
+        assert [e for e in reg.events if e["event"] == "distributed_fit"]
+
+        # imbalanced fit: shard 0 = structureless uniform noise (its
+        # bounds never prune -> far more evals than the median shard)
+        rng = np.random.default_rng(7)
+        clustered, _, _ = make_points(3584, 16, 24, seed=4,
+                                      cluster_std=0.3)
+        noise = rng.uniform(-20, 20, size=(512, 16)).astype(np.float32)
+        pts = jnp.asarray(np.concatenate([noise, clustered], axis=0))
+        init = kmeans_plusplus(jax.random.PRNGKey(2), pts, 24)
+        wd = StragglerWatchdog(threshold=1.6)
+        _, st = distributed_yinyang(pts, init, mesh, return_stats=True,
+                                    watchdog=wd, **kw)
+        assert float(np.max(st.shard_skew)) > 1.5, st.shard_skew
+        assert wd.events, "noise shard never flagged"
+        assert all(e["shard"] == 0 for e in wd.events), wd.events
+        print("DIST-OBS-OK")
+    """)
