@@ -135,8 +135,9 @@ def write_json(rows, path="BENCH_kmeans.json", scale=1.0):
     """Machine-readable perf record so the trajectory is tracked
     across PRs (consumed by CI via ``benchmarks/run.py --check`` and by
     later sessions). Preserves the ``streaming`` / ``distributed`` /
-    ``predict`` sections owned by ``streaming_bench.py`` /
-    ``distributed_bench.py`` / ``predict_bench.py``.
+    ``predict`` / ``resilience`` sections owned by
+    ``streaming_bench.py`` / ``distributed_bench.py`` /
+    ``predict_bench.py`` / ``resilience_bench.py``.
     ``scale`` is recorded so the --check gate can re-measure at the
     SAME problem sizes (speedups at different n are incommensurable:
     tiny problems auto-route to Lloyd)."""
@@ -144,7 +145,8 @@ def write_json(rows, path="BENCH_kmeans.json", scale=1.0):
     try:
         with open(path) as fh:
             payload = {k: v for k, v in json.load(fh).items()
-                       if k in ("streaming", "distributed", "predict")}
+                       if k in ("streaming", "distributed", "predict",
+                                "resilience")}
     except (FileNotFoundError, ValueError):
         pass
     payload["scale"] = scale

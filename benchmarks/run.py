@@ -166,7 +166,8 @@ def check(args) -> None:
 
     from repro.obs import MetricsRegistry, profile
 
-    from . import kmeans_speedup, predict_bench, streaming_bench
+    from . import (kmeans_speedup, predict_bench, resilience_bench,
+                   streaming_bench)
 
     reg = MetricsRegistry()
     gates: dict = {}          # name -> ok, in report order
@@ -298,6 +299,24 @@ def check(args) -> None:
 
     gate("weighted-parity", weighted_parity_gate())
 
+    # resilience: the checkpointed streaming fit must be a pure
+    # observer (bit-exact vs the plain fit), crash + restore + replay
+    # must land on the identical centroids, and the async-save price
+    # must stay under 10% + 5ms of the plain streaming wall time.
+    # Placed BEFORE streaming-gap so the `failed == ["streaming-gap"]`
+    # subsystem exit code below stays precise.
+    rrow = resilience_bench.run(scale=scale, epochs=2)
+    res_budget_ms = rrow["stream_ms"] * 1.10 + 5.0
+    gate("resilience",
+         rrow["bit_exact"] and rrow["replay_exact"]
+         and rrow["resilient_ms"] <= res_budget_ms,
+         f"bit_exact={'OK' if rrow['bit_exact'] else 'FAIL'} "
+         f"replay_exact={'OK' if rrow['replay_exact'] else 'FAIL'} "
+         f"resilient={rrow['resilient_ms']:.1f}ms "
+         f"budget={res_budget_ms:.1f}ms "
+         f"(stream={rrow['stream_ms']:.1f}ms * 1.10 + 5ms) "
+         f"saves={rrow['ckpt_saves']} replayed={rrow['replayed_batches']}")
+
     # streaming LAST among the gates so `failed == ["streaming-gap"]`
     # cleanly selects the subsystem-specific exit code
     srow = streaming_bench.run(scale=scale, epochs=3)
@@ -351,8 +370,8 @@ def main() -> None:
     scale = 0.1 if args.quick else 1.0
 
     from . import filter_efficiency, group_sweep, kernel_bench
-    from . import (kmeans_speedup, predict_bench, roofline_report,
-                   streaming_bench)
+    from . import (kmeans_speedup, predict_bench, resilience_bench,
+                   roofline_report, streaming_bench)
 
     if args.tune:
         from . import autotune
@@ -366,6 +385,9 @@ def main() -> None:
     streaming_bench.main(scale=scale, json_path=args.json or None)
     print("# === predict path (tiled PassCore assign) ===", flush=True)
     predict_bench.main(scale=scale, json_path=args.json or None)
+    print("# === resilience (checkpointed streaming, crash replay) ===",
+          flush=True)
+    resilience_bench.main(scale=scale, json_path=args.json or None)
     print("# === distributed engine (forced multi-device CPU) ===",
           flush=True)
     # subprocess: the forced device count must be set before jax

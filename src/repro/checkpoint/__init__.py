@@ -1,4 +1,9 @@
 """Sharded atomic checkpointing."""
-from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .checkpoint import (CheckpointCorruptError, available_steps,
+                         latest_step, load_checkpoint_arrays,
+                         restore_checkpoint, save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint", "restore_checkpoint", "latest_step",
+    "available_steps", "load_checkpoint_arrays", "CheckpointCorruptError",
+]

@@ -3,7 +3,7 @@
 Layout (no external deps — npz shards + a JSON manifest):
 
     <dir>/step_000123/
-        manifest.json          {step, tree structure, leaf shapes/dtypes}
+        manifest.json          {step, leaf shapes/dtypes, optional meta}
         shard_<host>.npz       one file per host: every leaf's
                                host-local addressable data, concatenated
                                by flat leaf index
@@ -17,7 +17,24 @@ Properties needed at 1000+-node scale, scaled down honestly here:
     device_puts into ANY new mesh/sharding (mesh size can change
     between runs — the npz holds full global arrays per leaf on a
     single-process runtime; multi-host would store per-host slices +
-    offsets, same manifest format).
+    offsets, same manifest format),
+  * VALIDATED restore with fallback: a torn/corrupt step (missing or
+    unreadable manifest / shard file, leaf count or shape drift) is
+    rejected — ``fallback=True`` walks back to the newest COMPLETE
+    save instead of failing the run, even when LATEST itself points at
+    the corrupt step.
+
+Two access levels:
+
+* :func:`save_checkpoint` / :func:`restore_checkpoint` — the pytree
+  API (arrays in, arrays out, optional sharding re-targeting).
+* :func:`load_checkpoint_arrays` — raw host numpy leaves + the
+  manifest, NO device placement. Callers whose state is not a plain
+  device pytree (e.g. ``repro.streaming``'s stream state: a float64
+  drift ledger, variable-structure bound cache, host scalars in
+  ``meta``) restore through this so nothing is silently cast by
+  ``jax.device_put`` (x64 is disabled on device; the ledger must stay
+  float64 on the host).
 """
 from __future__ import annotations
 
@@ -31,13 +48,26 @@ import jax
 import numpy as np
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A step directory exists but cannot be restored (partial write,
+    truncated shard, manifest/leaf mismatch)."""
+
+
 def _flat_with_paths(tree):
     flat, treedef = jax.tree.flatten(tree)
     return flat, treedef
 
 
-def save_checkpoint(ckpt_dir, step: int, state, *, async_: bool = False):
-    """Serialise ``state`` (any pytree of jax/np arrays) for ``step``."""
+def save_checkpoint(ckpt_dir, step: int, state, *, async_: bool = False,
+                    meta: dict | None = None):
+    """Serialise ``state`` (any pytree of jax/np arrays) for ``step``.
+
+    ``meta``: optional JSON-serialisable blob stored in the manifest —
+    the side-channel for host scalars / structure descriptions that are
+    not array leaves (``load_checkpoint_arrays`` hands it back). The
+    host snapshot (``np.asarray`` per leaf) happens synchronously;
+    callers passing host arrays they mutate IN PLACE must snapshot
+    copies themselves before an ``async_=True`` save."""
     ckpt_dir = Path(ckpt_dir)
 
     # Snapshot to host memory synchronously (cheap), write async.
@@ -53,6 +83,8 @@ def save_checkpoint(ckpt_dir, step: int, state, *, async_: bool = False):
             "leaves": [{"shape": list(x.shape), "dtype": str(x.dtype)}
                        for x in host_leaves],
         }
+        if meta is not None:
+            manifest["meta"] = meta
         (tmp_dir / "manifest.json").write_text(json.dumps(manifest))
         np.savez(tmp_dir / "shard_0.npz",
                  **{f"leaf_{i}": x for i, x in enumerate(host_leaves)})
@@ -78,20 +110,103 @@ def latest_step(ckpt_dir) -> int | None:
     return int(ptr.read_text().strip().split("_")[-1])
 
 
+def available_steps(ckpt_dir) -> list[int]:
+    """All published step numbers under ``ckpt_dir``, ascending.
+    Published = the atomic rename happened (``.tmp_*`` dirs from
+    crashed saves are invisible); a published dir may still be corrupt
+    on disk-level damage — :func:`load_checkpoint_arrays` validates."""
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.is_dir():
+        return []
+    steps = []
+    for p in ckpt_dir.iterdir():
+        if p.is_dir() and p.name.startswith("step_"):
+            try:
+                steps.append(int(p.name.split("_")[-1]))
+            except ValueError:
+                continue
+    return sorted(steps)
+
+
+def _load_step(ckpt_dir: Path, step: int):
+    """Read + validate one step. Raises CheckpointCorruptError on any
+    torn/partial/inconsistent state."""
+    step_dir = ckpt_dir / f"step_{step:06d}"
+    if not step_dir.is_dir():
+        raise CheckpointCorruptError(f"{step_dir} does not exist")
+    try:
+        manifest = json.loads((step_dir / "manifest.json").read_text())
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest in {step_dir}: {e}") from e
+    try:
+        data = np.load(step_dir / "shard_0.npz")
+        leaves = [data[f"leaf_{i}"]
+                  for i in range(len(manifest["leaves"]))]
+    except (OSError, ValueError, KeyError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable/partial shard in {step_dir}: {e}") from e
+    for got, want in zip(leaves, manifest["leaves"]):
+        if list(got.shape) != list(want["shape"]):
+            raise CheckpointCorruptError(
+                f"leaf shape {got.shape} != manifest {want['shape']} "
+                f"in {step_dir}")
+    return manifest, leaves
+
+
+def load_checkpoint_arrays(ckpt_dir, *, step: int | None = None,
+                           fallback: bool = False):
+    """Load ``(step, manifest, leaves)`` — host numpy, no device_put.
+
+    ``step=None`` starts from the LATEST pointer (or the newest
+    published step when the pointer is missing/stale). ``fallback=True``
+    walks back through older complete saves when the requested/latest
+    one is corrupt or partial — the restart story for a host that died
+    MID-save (the atomic rename makes that window tiny but a torn disk
+    is still representable). Raises :class:`FileNotFoundError` when no
+    checkpoint exists at all, :class:`CheckpointCorruptError` when the
+    requested step is damaged and fallback is off (or every candidate
+    is damaged)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is not None:
+        candidates = [step]
+        if fallback:
+            candidates += [s for s in reversed(available_steps(ckpt_dir))
+                           if s < step]
+    else:
+        steps = available_steps(ckpt_dir)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        newest = latest_step(ckpt_dir)
+        if newest is None or newest not in steps:
+            newest = steps[-1]
+        candidates = [newest] if not fallback else \
+            [newest] + [s for s in reversed(steps) if s != newest]
+    last_err: Exception | None = None
+    for s in candidates:
+        try:
+            manifest, leaves = _load_step(ckpt_dir, s)
+            return s, manifest, leaves
+        except CheckpointCorruptError as e:
+            last_err = e
+            continue
+    raise last_err if last_err is not None else \
+        FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+
+
 def restore_checkpoint(ckpt_dir, like, *, step: int | None = None,
-                       shardings=None):
+                       shardings=None, fallback: bool = False):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). ``shardings`` may target a DIFFERENT mesh than
-    the one that saved — elastic restart."""
-    ckpt_dir = Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    step_dir = ckpt_dir / f"step_{step:06d}"
-    data = np.load(step_dir / "shard_0.npz")
+    the one that saved — elastic restart. ``fallback=True`` drops back
+    to the newest complete save when the latest is corrupt/partial."""
+    step, _, leaves = load_checkpoint_arrays(ckpt_dir, step=step,
+                                             fallback=fallback)
     flat_like, treedef = jax.tree.flatten(like)
-    leaves = [data[f"leaf_{i}"] for i in range(len(flat_like))]
+    if len(leaves) != len(flat_like):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected "
+            f"{len(flat_like)}")
     for got, want in zip(leaves, flat_like):
         if tuple(got.shape) != tuple(want.shape):
             raise ValueError(

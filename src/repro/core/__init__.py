@@ -2,7 +2,7 @@
 from .api import KMeans, NotFittedError
 from .distances import pairwise_dists, pairwise_sq_dists, rowwise_dists
 from .compact import yinyang_compact
-from .distributed import distributed_yinyang
+from .distributed import distributed_yinyang, make_mesh
 from .engine import EngineConfig, EngineStats, fit as engine_fit
 from .init import kmeans_plusplus, random_init
 from .kmeans import EvalCount, KMeansResult, group_centroids, lloyd, yinyang
@@ -10,7 +10,8 @@ from .kmeans import EvalCount, KMeansResult, group_centroids, lloyd, yinyang
 __all__ = [
     "KMeans", "KMeansResult", "NotFittedError", "lloyd", "yinyang",
     "group_centroids", "kmeans_plusplus", "random_init",
-    "distributed_yinyang", "yinyang_compact", "engine_fit", "EngineStats",
+    "distributed_yinyang", "make_mesh", "yinyang_compact",
+    "engine_fit", "EngineStats",
     "EngineConfig", "EvalCount",
     "pairwise_dists", "pairwise_sq_dists", "rowwise_dists",
 ]

@@ -100,22 +100,25 @@ class KMeans:
         self._stream = None
         self._assign_tables = None  # cached (groups, members, gsize, g)
 
-    def _init_centroids(self, points):
+    def _init_centroids(self, points, weights=None):
         key = jax.random.PRNGKey(self.seed)
         if self.init == "k-means++":
-            return kmeans_plusplus(key, points, self.n_clusters)
+            return kmeans_plusplus(key, points, self.n_clusters,
+                                   weights=weights)
         return random_init(key, points, self.n_clusters)
 
     def fit(self, points, sample_weight=None) -> "KMeans":
         """Batch fit. ``sample_weight``: optional (N,) per-point
         weights — weighted centroid means and inertia through every
-        backend (the filters are weight-independent, so the work
-        saving is unchanged); ``None`` is bit-identical to uniform
-        weights of 1.0."""
+        backend, AND weighted D^2 sampling in the k-means++ seeding (a
+        weight-m point seeds like m duplicates); the filters are
+        weight-independent, so the work saving is unchanged. ``None``
+        is bit-identical to uniform weights of 1.0 for the fit and
+        runs the seed's original seeding program."""
         points = jnp.asarray(points)
         weights = None if sample_weight is None else \
             jnp.asarray(sample_weight, jnp.float32)
-        init_c = self._init_centroids(points)
+        init_c = self._init_centroids(points, weights)
         self.stats_ = None        # only engine-path fits produce stats
         if self.algorithm == "lloyd":
             res = _km.lloyd(points, init_c, self.max_iters, self.tol,

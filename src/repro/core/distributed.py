@@ -214,6 +214,19 @@ def _mesh_shards(mesh: Mesh, axes) -> int:
     return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64))
 
 
+def make_mesh(shards: int, axis: str = "data", devices=None) -> Mesh:
+    """A 1-D data mesh over the first ``shards`` devices — the helper
+    every driver (and the elastic restart path, which rebuilds a mesh
+    of a DIFFERENT size around one checkpoint) uses instead of
+    hand-rolling ``Mesh(np.array(jax.devices()[:n]), ...)``."""
+    devices = list(jax.devices() if devices is None else devices)
+    if shards > len(devices):
+        raise ValueError(
+            f"requested {shards} shards but only {len(devices)} "
+            f"devices are available")
+    return Mesh(np.array(devices[:shards]), (axis,))
+
+
 # Builder memos: a fresh shard_map closure is a fresh jit cache key, so
 # without these every distributed_yinyang call would re-trace AND
 # re-compile the whole sharded program (the compact ladder compiles one

@@ -157,11 +157,16 @@ class PointStream:
             * self.cluster_std
         return pts.astype(np.float32)
 
-    def batches(self, epochs: int = 1):
-        """Yield ``(shard_id, points)`` over ``epochs`` full passes."""
-        for _ in range(max(int(epochs), 1)):
-            for s in range(self.n_shards):
-                yield s, self.shard(s)
+    def batches(self, epochs: int = 1, start: int = 0):
+        """Yield ``(shard_id, points)`` over ``epochs`` full passes.
+        ``start`` skips ahead to a global step mid-schedule — the
+        restart-from-checkpoint entry point: because every shard is
+        (seed, shard)-deterministic, resuming at step ``s`` yields
+        bit-identical batches to the run that died there."""
+        total = max(int(epochs), 1) * self.n_shards
+        for step in range(int(start), total):
+            s = step % self.n_shards
+            yield s, self.shard(s)
 
     def global_batch(self, step: int) -> dict:
         s = step % self.n_shards

@@ -97,12 +97,28 @@ class StragglerWatchdog:
 
 
 class ResilientLoop:
-    """Checkpoint/restart training driver."""
+    """Checkpoint/restart training driver.
+
+    The default save/restore path treats ``state`` as a fixed-structure
+    pytree of device arrays (``save_checkpoint`` / ``restore_checkpoint``).
+    Drivers whose state is richer — host-side float64 ledgers, a bound
+    cache whose pytree structure changes between checkpoints, scalars
+    that live outside arrays (``repro.streaming``'s resilient layer is
+    the canonical client) — inject their own serialization:
+
+    * ``save_fn(state, step) -> Thread | None`` replaces the default
+      checkpoint write (return the async writer thread, or ``None`` for
+      a synchronous save);
+    * ``restore_fn(state) -> (state, step)`` replaces the default
+      restore (it decides its own ``like`` structure and device
+      placement, and may fall back to an older complete checkpoint).
+    """
 
     def __init__(self, step_fn, pipeline, ckpt_dir, *,
                  ckpt_every: int = 50, injector: FailureInjector | None = None,
                  watchdog: StragglerWatchdog | None = None,
-                 max_restarts: int = 8, async_ckpt: bool = True):
+                 max_restarts: int = 8, async_ckpt: bool = True,
+                 save_fn=None, restore_fn=None):
         self.step_fn = step_fn
         self.pipeline = pipeline
         self.ckpt_dir = ckpt_dir
@@ -111,12 +127,35 @@ class ResilientLoop:
         self.watchdog = watchdog or StragglerWatchdog()
         self.max_restarts = max_restarts
         self.async_ckpt = async_ckpt
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
         self.restarts = 0
         self.metrics_log: list[dict] = []
 
-    def run(self, state, n_steps: int, *, state_shardings=None):
-        step = int(jax.device_get(state.step)) if hasattr(state, "step") else 0
-        save_checkpoint(self.ckpt_dir, step, state)   # step-0 anchor
+    def _save(self, state, step: int):
+        if self.save_fn is not None:
+            return self.save_fn(state, step)
+        return save_checkpoint(self.ckpt_dir, step, state,
+                               async_=self.async_ckpt)
+
+    def _restore(self, state, state_shardings):
+        if self.restore_fn is not None:
+            return self.restore_fn(state)
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        return restore_checkpoint(self.ckpt_dir, like,
+                                  shardings=state_shardings)
+
+    def run(self, state, n_steps: int, *, state_shardings=None,
+            start_step: int | None = None):
+        if start_step is not None:
+            step = int(start_step)
+        else:
+            step = int(jax.device_get(state.step)) \
+                if hasattr(state, "step") else 0
+        anchor = self._save(state, step)              # step anchor
+        if anchor is not None:
+            anchor.join()
         pending = None
         while step < n_steps:
             try:
@@ -125,7 +164,8 @@ class ResilientLoop:
                     self.injector.check(step)
                 batch = self.pipeline.global_batch(step)
                 state, metrics = self.step_fn(state, batch)
-                jax.block_until_ready(jax.tree.leaves(metrics)[0])
+                if metrics:
+                    jax.block_until_ready(jax.tree.leaves(metrics)[0])
                 dt = time.perf_counter() - t0
                 self.watchdog.observe(step, dt)
                 self.metrics_log.append(
@@ -136,8 +176,7 @@ class ResilientLoop:
                 if step % self.ckpt_every == 0:
                     if pending is not None:
                         pending.join()
-                    pending = save_checkpoint(self.ckpt_dir, step, state,
-                                              async_=self.async_ckpt)
+                    pending = self._save(state, step)
             except InjectedFailure:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
@@ -145,10 +184,7 @@ class ResilientLoop:
                 if pending is not None:
                     pending.join()
                     pending = None
-                like = jax.tree.map(
-                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
-                state, step = restore_checkpoint(
-                    self.ckpt_dir, like, shardings=state_shardings)
+                state, step = self._restore(state, state_shardings)
         if pending is not None:
             pending.join()
         return state

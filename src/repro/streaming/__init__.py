@@ -5,10 +5,11 @@ two-level-filtered candidate pass with triangle-inequality bounds
 CARRIED across batches (see ``estimator.py`` for the full design).
 """
 from .estimator import StreamingKMeans
+from .resilient import fit_stream_resilient
 from .state import (BoundCache, DriftLedger, ShardBounds, StreamStats,
                     inflate_bounds)
 
 __all__ = [
     "StreamingKMeans", "StreamStats", "ShardBounds", "DriftLedger",
-    "BoundCache", "inflate_bounds",
+    "BoundCache", "inflate_bounds", "fit_stream_resilient",
 ]

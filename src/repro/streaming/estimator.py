@@ -51,6 +51,7 @@ the normal step so their bounds enter the cache.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -168,6 +169,12 @@ class StreamingKMeans:
         self._cache = BoundCache(max_cached_shards)
         self._ledger: DriftLedger | None = None
         self._labels_last: np.ndarray | None = None
+        # chaos-test seam: called inside _step AFTER the device update
+        # lands but BEFORE the host-side commit (ledger, cache, stats).
+        # Raising here models a host crash mid-batch — the estimator is
+        # left TORN (device centroids advanced, host bookkeeping not)
+        # and only a checkpoint restore makes it consistent again.
+        self.chaos_hook = None
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -197,8 +204,21 @@ class StreamingKMeans:
                 f"initialize, got {len(buf)}")
         pts = jnp.asarray(buf)
         key = jax.random.PRNGKey(self.seed)
-        seeder = kmeans_plusplus if self.init == "k-means++" else random_init
-        init_c = seeder(key, pts, k)
+        # Weighted cold start: when any buffered batch carried weights,
+        # seed by weighted D^2 sampling (weightless batches count as
+        # weight 1.0). An all-None buffer keeps the original unweighted
+        # seeding program bit-identically.
+        buf_w = None
+        if any(w is not None for _, _, w in self._buffer):
+            buf_w = np.concatenate(
+                [w if w is not None else np.ones((len(p),), np.float32)
+                 for _, p, w in self._buffer], axis=0)
+        if self.init == "k-means++":
+            init_c = kmeans_plusplus(
+                key, pts, k,
+                weights=None if buf_w is None else jnp.asarray(buf_w))
+        else:
+            init_c = random_init(key, pts, k)
 
         g = self._resolved_groups()
         groups = group_centroids(init_c, g)
@@ -404,6 +424,8 @@ class StreamingKMeans:
                 self._gsize, assign, ub_t, lb_d, need, w,
                 core=self._local_core(cap_n, cap_g))
         self._centroids, self._counts = out.centroids, out.counts
+        if self.chaos_hook is not None:
+            self.chaos_hook(self, sid)
 
         (nas_np, ub_np, lb_np, pairs, gmax, drift_np, gdrift_np,
          bcounts_np, bcost) = jax.device_get(
@@ -507,10 +529,234 @@ class StreamingKMeans:
             self._since_hit[c] = 0
             self.stats_.reseeds += 1
 
+    # -- checkpoint / restore ----------------------------------------------
+
+    _CKPT_FORMAT = "skm-stream-state-v1"
+
+    def _pack_state(self):
+        """Snapshot the FULL stream state as (leaves, meta).
+
+        Every mutable host array is COPIED here (the ledger and
+        ``_since_hit`` are mutated in place by later steps), so the
+        snapshot is safe to hand to an async checkpoint writer. The
+        fixed leaf head is [centroids, counts, ledger_centroid,
+        ledger_group, since_hit, groups, labels_last, far_ub, far_pts];
+        each cached shard appends [assignments, ub, lb, ub_off,
+        gdrift_snap] in LRU order, with its id + scalars in
+        ``meta['cache']``. The float64 ledger stays float64 end to end
+        (npz round-trips bits exactly; restore never device_puts it)."""
+        self._require_fitted()
+        d = int(self._centroids.shape[1])
+        labels = self._labels_last
+        far_ub = np.asarray([u for u, _ in self._far], np.float64)
+        far_pts = (np.stack([p for _, p in self._far]).astype(np.float32)
+                   if self._far else np.zeros((0, d), np.float32))
+        leaves = [
+            np.asarray(jax.device_get(self._centroids), np.float32),
+            np.asarray(jax.device_get(self._counts), np.float32),
+            self._ledger.centroid.copy(),
+            self._ledger.group.copy(),
+            self._since_hit.copy(),
+            np.array(self._groups_np),
+            (np.zeros((0,), np.int32) if labels is None
+             else np.array(labels)),
+            far_ub, far_pts,
+        ]
+        cache_meta = []
+        for sid in list(self._cache._d.keys()):       # LRU order
+            e = self._cache._d[sid]
+            leaves += [np.array(e.assignments), np.array(e.ub),
+                       np.array(e.lb), np.array(e.ub_off),
+                       np.array(e.gdrift_snap)]
+            cache_meta.append({"sid": sid, "gmax": int(e.gmax),
+                               "ub_scale": float(e.ub_scale)})
+        meta = {
+            "format": self._CKPT_FORMAT,
+            "config": {
+                "n_clusters": self.n_clusters, "n_groups": self._g,
+                "init": self.init, "decay": self.decay,
+                "init_size": self.init_size, "seed": self.seed,
+                "min_bucket": self.min_bucket, "chunk": self.chunk,
+                "ggf": self._ggf,
+                "reseed_patience": self.reseed_patience,
+                "drift_reset_factor": self.drift_reset_factor,
+                "max_cached_shards": self._cache.max_shards,
+            },
+            "has_labels": labels is not None,
+            "ewa_inertia": self.ewa_inertia_,
+            "stats": self.stats_.to_dict(),
+            "shards_seen": sorted(self._shards_seen),
+            "cache": cache_meta,
+            "n_shards_at_save": self._n_shards,
+        }
+        return leaves, meta
+
+    def save(self, ckpt_dir, step: int, *, async_: bool = False):
+        """Checkpoint the full stream state (see :meth:`_pack_state`)
+        through :func:`repro.checkpoint.save_checkpoint` — atomic
+        publish, LATEST pointer, optional async writer thread (returned
+        so callers can ``join``). ``step`` is the stream-schedule index
+        the state corresponds to (the resilient driver's global batch
+        counter) — restore hands it back so replay knows where to
+        resume."""
+        from ..checkpoint.checkpoint import save_checkpoint
+        leaves, meta = self._pack_state()
+        t = save_checkpoint(ckpt_dir, step, leaves, async_=async_,
+                            meta=meta)
+        self.stats_.ckpt_saves += 1
+        return t
+
+    def _install(self, manifest: dict, leaves: list) -> None:
+        """Overwrite ALL live state from a checkpoint's arrays. The
+        new-mesh (elastic) path needs nothing special: cached bounds
+        are stored UNPADDED per shard, capacities and shard padding are
+        re-derived per batch from the CURRENT mesh, and the sharded
+        step/bounds programs are compiled lazily — so a checkpoint from
+        a 2-shard run restores into a 4-shard (or single-device) run
+        with every cached bound still valid."""
+        meta = manifest.get("meta") or {}
+        if meta.get("format") != self._CKPT_FORMAT:
+            raise ValueError(
+                f"not a stream-state checkpoint (format="
+                f"{meta.get('format')!r})")
+        cfg = meta["config"]
+        if cfg["n_clusters"] != self.n_clusters:
+            raise ValueError(
+                f"checkpoint has n_clusters={cfg['n_clusters']}, "
+                f"estimator has {self.n_clusters}")
+        (cent, counts, led_c, led_g, since, groups, labels,
+         far_ub, far_pts) = leaves[:9]
+        k, g = self.n_clusters, int(cfg["n_groups"])
+
+        self._centroids = jnp.asarray(cent)
+        self._counts = jnp.asarray(counts)
+        self._g = g
+        self._groups_np = np.array(groups)
+        self._groups = jnp.asarray(self._groups_np.astype(np.int32))
+        self._members, self._gsize = _engine.build_group_tables(
+            self._groups_np, g)
+        self._ledger = DriftLedger(k, g)
+        self._ledger.centroid[:] = led_c
+        self._ledger.group[:] = led_g
+        self._since_hit = np.array(since)
+        self._labels_last = np.array(labels) if meta["has_labels"] else None
+        self._far = [(float(u), far_pts[i].copy())
+                     for i, u in enumerate(far_ub)]
+        self._shards_seen = set(meta["shards_seen"])
+        self.ewa_inertia_ = meta["ewa_inertia"]
+        known = {f.name for f in dataclasses.fields(StreamStats)}
+        self.stats_ = StreamStats(**{kk: v for kk, v in
+                                     meta["stats"].items() if kk in known})
+        # the tuned engine configuration was resolved at cold start;
+        # adopt the checkpointed values so the restored run compiles
+        # the exact same per-batch programs
+        self.min_bucket = int(cfg["min_bucket"])
+        self.chunk = int(cfg["chunk"])
+        self._ggf = int(cfg["ggf"])
+        self._cache = BoundCache(int(cfg["max_cached_shards"]))
+        off = 9
+        for ce in meta["cache"]:
+            a, ub, lb, ub_off, gsnap = leaves[off:off + 5]
+            off += 5
+            self._cache.put(ce["sid"], ShardBounds(
+                assignments=np.array(a), ub=np.array(ub),
+                lb=np.array(lb), ub_off=np.array(ub_off),
+                gdrift_snap=np.array(gsnap), gmax=int(ce["gmax"]),
+                ub_scale=float(ce["ub_scale"])))
+        self._buffer, self._buffered = [], 0
+        # mesh-dependent compiled programs are stale on elastic restore
+        self._sharded_bounds = None
+        self._sharded_updates = {}
+
+    def restore_state(self, ckpt_dir, *, step: int | None = None,
+                      fallback: bool = True) -> int:
+        """Restore this estimator's full stream state from the latest
+        (or given) checkpoint under ``ckpt_dir``; returns the
+        checkpoint's stream-schedule step so the caller can replay the
+        deterministic stream from there. ``fallback=True`` walks back
+        to the newest COMPLETE save when the latest is corrupt or
+        partial (see :func:`repro.checkpoint.load_checkpoint_arrays`)."""
+        from ..checkpoint.checkpoint import load_checkpoint_arrays
+        got_step, manifest, leaves = load_checkpoint_arrays(
+            ckpt_dir, step=step, fallback=fallback)
+        self._install(manifest, leaves)
+        self.stats_.restores += 1
+        return got_step
+
+    @classmethod
+    def restore(cls, ckpt_dir, *, step: int | None = None, mesh=None,
+                mesh_axes=("data",), obs=None, fallback: bool = True):
+        """Build a fresh estimator from a checkpoint — the ELASTIC
+        entry point: pass the NEW (grown/shrunk/absent) ``mesh`` and
+        the state re-pads into it on the next batch. Returns
+        ``(estimator, step)``."""
+        from ..checkpoint.checkpoint import load_checkpoint_arrays
+        got_step, manifest, leaves = load_checkpoint_arrays(
+            ckpt_dir, step=step, fallback=fallback)
+        meta = manifest.get("meta") or {}
+        if meta.get("format") != cls._CKPT_FORMAT:
+            raise ValueError(
+                f"not a stream-state checkpoint (format="
+                f"{meta.get('format')!r})")
+        cfg = meta["config"]
+        skm = cls(cfg["n_clusters"], n_groups=cfg["n_groups"],
+                  init=cfg["init"], decay=cfg["decay"],
+                  init_size=cfg["init_size"], seed=cfg["seed"],
+                  min_bucket=cfg["min_bucket"], chunk=cfg["chunk"],
+                  max_cached_shards=cfg["max_cached_shards"],
+                  reseed_patience=cfg["reseed_patience"],
+                  drift_reset_factor=cfg["drift_reset_factor"],
+                  tune="off", mesh=mesh, mesh_axes=mesh_axes, obs=obs)
+        skm._install(manifest, leaves)
+        skm.stats_.restores += 1
+        return skm, got_step
+
+    def reset_state(self) -> None:
+        """Drop ALL learned state, back to the just-constructed cold
+        start (the restore path when a failure lands before the first
+        checkpoint: replaying the deterministic stream from step 0
+        through a reset estimator reproduces the original cold start
+        bit-for-bit)."""
+        self._centroids = None
+        self._counts = None
+        self._ledger = None
+        self._labels_last = None
+        self._buffer, self._buffered = [], 0
+        self._cache = BoundCache(self._cache.max_shards)
+        self._sharded_bounds = None
+        self._sharded_updates = {}
+        self.stats_ = StreamStats()
+        self.ewa_inertia_ = None
+
+    def adopt_centroids(self, centroids, counts=None) -> None:
+        """Warm handover: replace the live centroids with externally
+        supplied ones (e.g. from a peer run's checkpoint) WITHOUT
+        discarding the bound cache — each centroid's jump ``||Δc||``
+        enters the :class:`DriftLedger` exactly like a reseed, so every
+        cached bound stays a true triangle-inequality bound against the
+        adopted centroids."""
+        self._require_fitted()
+        new = np.asarray(centroids, np.float32)
+        old = np.asarray(jax.device_get(self._centroids))
+        if new.shape != old.shape:
+            raise ValueError(f"adopted centroids shape {new.shape} != "
+                             f"{old.shape}")
+        jump = np.linalg.norm(new - old, axis=-1).astype(np.float64)
+        gjump = np.zeros((self._g,), np.float64)
+        np.maximum.at(gjump, self._groups_np.astype(np.int64), jump)
+        self._ledger.add(jump, gjump)
+        self._centroids = jnp.asarray(new)
+        if counts is not None:
+            self._counts = jnp.asarray(np.asarray(counts, np.float32))
+
     # -- stream driving ----------------------------------------------------
 
     def fit_stream(self, source, epochs: int = 1,
-                   max_batches: int | None = None) -> "StreamingKMeans":
+                   max_batches: int | None = None, *,
+                   resilient: bool = False, ckpt_dir=None,
+                   ckpt_every: int = 8, injector=None, watchdog=None,
+                   max_restarts: int = 8,
+                   async_ckpt: bool = True) -> "StreamingKMeans":
         """Drive :meth:`partial_fit` over a stream source.
 
         ``source`` may be a :class:`repro.data.PointStream` (shard ids
@@ -520,7 +766,29 @@ class StreamingKMeans:
         'sample_weight': ...}`` dicts (the ``PrefetchingLoader``
         protocol; ``sample_weight`` optional). Generators are consumed
         once regardless of ``epochs``. Short streams that never reach
-        ``init_size`` are flushed into an init at the end."""
+        ``init_size`` are flushed into an init at the end.
+
+        ``resilient=True`` (requires ``ckpt_dir`` and a deterministic
+        ``global_batch``-protocol source such as ``PointStream``)
+        drives the fit through the fault-tolerant runtime instead: the
+        full stream state checkpoints every ``ckpt_every`` batches
+        (atomic, async by default), any failure restores the latest
+        complete checkpoint (falling back past corrupt ones) and
+        REPLAYS the deterministic stream from the checkpointed batch
+        index — landing on centroids bit-identical to an uninterrupted
+        run (see :mod:`repro.streaming.resilient` and
+        ``docs/fault_tolerance.md``). ``injector``/``watchdog`` are
+        the :mod:`repro.runtime.fault_tolerance` chaos/straggler
+        hooks."""
+        if resilient:
+            from .resilient import fit_stream_resilient
+            if ckpt_dir is None:
+                raise ValueError("resilient=True requires ckpt_dir")
+            return fit_stream_resilient(
+                self, source, ckpt_dir=ckpt_dir, epochs=epochs,
+                max_batches=max_batches, ckpt_every=ckpt_every,
+                injector=injector, watchdog=watchdog,
+                max_restarts=max_restarts, async_ckpt=async_ckpt)
         seen = 0
         for sid, pts, w in self._iter_source(source, epochs):
             self.partial_fit(pts, shard_id=sid, sample_weight=w)

@@ -1,0 +1,165 @@
+"""Fault-tolerant streaming fits: checkpoint / restore / replay.
+
+This is the glue between three pieces that already exist on their own:
+
+* :class:`repro.streaming.StreamingKMeans` — the bound-carrying
+  mini-batch estimator, which can now snapshot/restore its FULL stream
+  state (centroids, EMA counts, float64 drift ledger, per-shard bound
+  cache, reseed reservoir, stats);
+* :mod:`repro.checkpoint` — atomic async sharded saves with validated,
+  corrupt-tolerant restore;
+* :class:`repro.runtime.fault_tolerance.ResilientLoop` — the
+  restart-on-failure driver, with `FailureInjector` chaos hooks.
+
+The recovery contract is REPLAY, not approximation: the stream source
+must speak the deterministic ``global_batch(step)`` protocol
+(:class:`repro.data.PointStream` does — shard ``s`` regenerates
+bit-identically from ``rng((seed, s+1))``), so after a failure the
+loop restores the newest complete checkpoint and re-runs the exact
+batches the dead run saw after it. Every replayed step re-executes the
+same jitted programs on bit-identical inputs (the checkpoint restores
+every input bit-for-bit, including the float64 ledger, which never
+transits a device), so the centroids, counts, ledger and bound cache
+land bit-identical to an uninterrupted run. Only :class:`StreamStats`
+legitimately differs — replayed work is still work, and is counted
+(``replayed_batches``, ``restores``, ``ckpt_saves``).
+
+Elasticity rides on the same mechanism: a checkpoint taken under one
+mesh restores under any other (or none) — cached bounds are stored
+unpadded per shard, and the estimator re-pads batches and rebuilds its
+capacity ladders lazily against the CURRENT mesh. Exact bit-parity
+holds for equal reduction topologies; across a resize the psum
+partitioning changes, so the guarantee weakens to numerical parity
+(identical assignments / inertia to fp tolerance) — see
+``docs/fault_tolerance.md``.
+
+Observability: with ``obs`` enabled on the estimator, recovery is
+visible — ``ckpt_saves_total`` / ``ckpt_save_seconds`` /
+``ckpt_last_step``, ``restore_total`` / ``restore_step``,
+``replay_batches_total``, and ``ckpt_save`` / ``restore`` events in
+the registry's event log.
+"""
+from __future__ import annotations
+
+import time
+
+from ..checkpoint.checkpoint import available_steps
+from ..runtime.fault_tolerance import ResilientLoop
+
+
+class _TrackingPipeline:
+    """global_batch passthrough that remembers the step it served —
+    the step_fn needs the schedule index to count replays, and the
+    ResilientLoop protocol doesn't pass it through."""
+
+    def __init__(self, stream):
+        self.stream = stream
+        self.last_step = 0
+
+    def global_batch(self, step: int):
+        self.last_step = step
+        return self.stream.global_batch(step)
+
+
+def fit_stream_resilient(skm, stream, *, ckpt_dir, epochs: int = 1,
+                         max_batches: int | None = None,
+                         ckpt_every: int = 8, injector=None,
+                         watchdog=None, max_restarts: int = 8,
+                         async_ckpt: bool = True, resume: bool = True):
+    """Drive ``skm`` over ``stream`` with checkpoint/restore-replay
+    fault tolerance (see module docstring for the exact contract).
+
+    ``stream`` must provide ``global_batch(step)`` and ``__len__``
+    (batches per epoch). ``ckpt_every`` is in batches; saves are async
+    by default (the writer thread is joined before the next save and at
+    exit). ``resume=True`` picks up an existing checkpoint directory —
+    the elastic-restart entry point: construct the estimator with the
+    NEW mesh (or use :meth:`StreamingKMeans.restore`) and the state
+    re-pads into it. Failures beyond ``max_restarts`` re-raise.
+    """
+    if not (hasattr(stream, "global_batch") and hasattr(stream, "__len__")):
+        raise ValueError(
+            "resilient fit needs a deterministic global_batch(step) "
+            "stream with a known length (e.g. repro.data.PointStream); "
+            "got " + type(stream).__name__)
+    n_steps = max(int(epochs), 1) * len(stream)
+    if max_batches is not None:
+        n_steps = min(n_steps, int(max_batches))
+    reg = skm._obs.resolve_registry() if skm._obs is not None else None
+
+    start = 0
+    if resume and available_steps(ckpt_dir):
+        start = skm.restore_state(ckpt_dir, fallback=True)
+        if reg is not None:
+            reg.counter("restore_total", "stream-state restores").inc()
+            reg.gauge("restore_step",
+                      "schedule step of the last restore").set(start)
+            reg.log_event("restore", step=start, reason="resume")
+    pipe = _TrackingPipeline(stream)
+    high_water = start
+
+    def step_fn(state, batch):
+        nonlocal high_water
+        step = pipe.last_step
+        if step < high_water:
+            skm.stats_.replayed_batches += 1
+            if reg is not None:
+                reg.counter("replay_batches_total",
+                            "batches re-run after a restore").inc()
+        else:
+            high_water = step + 1
+        skm.partial_fit(batch["points"], shard_id=batch["shard_id"],
+                        sample_weight=batch.get("sample_weight"))
+        return skm, {}
+
+    def save_fn(state, step):
+        if not skm.initialized:
+            return None        # nothing to save during the cold start
+        t0 = time.perf_counter()
+        thread = skm.save(ckpt_dir, step, async_=async_ckpt)
+        if reg is not None:
+            reg.counter("ckpt_saves_total",
+                        "stream-state checkpoints written").inc()
+            reg.gauge("ckpt_last_step",
+                      "schedule step of the last checkpoint").set(step)
+            reg.histogram(
+                "ckpt_save_seconds",
+                "state snapshot (plus write when sync)").observe(
+                time.perf_counter() - t0)
+            reg.log_event("ckpt_save", step=step,
+                          cache_entries=len(skm._cache),
+                          async_=bool(async_ckpt))
+        return thread
+
+    def restore_fn(state):
+        if available_steps(ckpt_dir):
+            step = skm.restore_state(ckpt_dir, fallback=True)
+            reason = "failure"
+        else:
+            # died before the first complete checkpoint: cold restart;
+            # replaying the deterministic stream from step 0 reproduces
+            # the original cold start bit-for-bit
+            skm.reset_state()
+            skm.stats_.restores += 1
+            step, reason = 0, "failure-before-first-checkpoint"
+        if reg is not None:
+            reg.counter("restore_total", "stream-state restores").inc()
+            reg.gauge("restore_step",
+                      "schedule step of the last restore").set(step)
+            reg.log_event("restore", step=step, reason=reason)
+        return skm, step
+
+    loop = ResilientLoop(step_fn, pipe, ckpt_dir, ckpt_every=ckpt_every,
+                         injector=injector, watchdog=watchdog,
+                         max_restarts=max_restarts, async_ckpt=async_ckpt,
+                         save_fn=save_fn, restore_fn=restore_fn)
+    loop.run(skm, n_steps, start_step=start)
+    if skm.initialized:
+        # terminal sync save so a later resume continues exactly here
+        skm.save(ckpt_dir, n_steps, async_=False)
+        if reg is not None:
+            reg.counter("ckpt_saves_total",
+                        "stream-state checkpoints written").inc()
+            reg.gauge("ckpt_last_step",
+                      "schedule step of the last checkpoint").set(n_steps)
+    return skm

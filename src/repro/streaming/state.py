@@ -36,6 +36,9 @@ class StreamStats:
     reseeds: int = 0
     init_batches: int = 0     # batches buffered for the cold-start init
     sharded_batches: int = 0  # batches run through the distributed step
+    ckpt_saves: int = 0       # stream-state checkpoints written
+    restores: int = 0         # stream-state restores (failure or resume)
+    replayed_batches: int = 0  # batches re-run after a restore
 
     def to_dict(self) -> dict:
         """JSON-serializable view (event logs / benchmark payloads)."""

@@ -239,17 +239,23 @@ def test_sharded_weighted_parity():
                           sample_weight=w[:4001], **kw)
         assert np.array_equal(np.asarray(r_du.assignments),
                               np.asarray(r_su.assignments))
-        # weighted sharded streaming: uniform weights == unweighted
+        # weighted sharded streaming: uniform weights == unweighted.
+        # The first batch seeds the cold start, and explicit weights
+        # route it through the weighted k-means++ sampler (a different
+        # program than the unweighted one) — feed it unweighted to
+        # BOTH so the comparison holds seeding fixed and exercises the
+        # weighted EMA steps.
         from repro.streaming import StreamingKMeans
         from repro.data import PointStream
         stream = PointStream(shard_size=997, n_shards=4, n_dims=16,
                              k=8, seed=3)
         sk_u = StreamingKMeans(8, seed=5, mesh=mesh)
         sk_w = StreamingKMeans(8, seed=5, mesh=mesh)
-        for sid, b in stream.batches(2):
+        for step, (sid, b) in enumerate(stream.batches(2)):
             sk_u.partial_fit(b, shard_id=sid)
             sk_w.partial_fit(b, shard_id=sid,
-                             sample_weight=np.ones(len(b), np.float32))
+                             sample_weight=None if step == 0 else
+                             np.ones(len(b), np.float32))
         np.testing.assert_array_equal(sk_u.cluster_centers_,
                                       sk_w.cluster_centers_)
         assert float(sk_u.counts_.sum()) == float(sk_w.counts_.sum())

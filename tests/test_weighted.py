@@ -74,10 +74,16 @@ def test_uniform_weight_bit_parity_reference_paths():
 
 
 def test_uniform_weight_bit_parity_streaming():
+    # the FIRST batch is fed unweighted to both so the cold-start
+    # seeding is held fixed (weights now reach the k-means++ init,
+    # where uniform weights select by a different sampler — the steps,
+    # not the seeding, carry the bit-parity contract)
     pts, _, _ = make_points(2048, 8, 8, seed=2)
     sk_u = StreamingKMeans(8, seed=3)
     sk_w = StreamingKMeans(8, seed=3)
-    for i in range(8):
+    sk_u.partial_fit(pts[:256], shard_id=0)
+    sk_w.partial_fit(pts[:256], shard_id=0)
+    for i in range(1, 8):
         b = pts[i * 256:(i + 1) * 256]
         sk_u.partial_fit(b, shard_id=i)
         sk_w.partial_fit(b, shard_id=i,
@@ -161,26 +167,117 @@ def test_kmeans_api_weighted_surface():
     # score is the negative weighted inertia of the training set
     s = km.score(pts, sample_weight=w)
     assert s == pytest.approx(-km.inertia_, rel=1e-4)
-    # uniform-weight fit == unweighted fit through the API
-    km_u = KMeans(n_clusters=8, engine="compact", seed=1,
-                  tune="off").fit(pts)
+    # weights reach the seeding through the API, so a uniform-weight
+    # fit is deterministic (bit-identical across calls) but draws its
+    # init through the weighted sampler; engine-level uniform parity
+    # with a SHARED init is covered above
     km_1 = KMeans(n_clusters=8, engine="compact", seed=1,
                   tune="off").fit(pts, sample_weight=np.ones(1200))
-    np.testing.assert_array_equal(km_u.labels_, km_1.labels_)
-    assert km_u.inertia_ == km_1.inertia_
+    km_2 = KMeans(n_clusters=8, engine="compact", seed=1,
+                  tune="off").fit(pts, sample_weight=np.ones(1200))
+    np.testing.assert_array_equal(km_1.labels_, km_2.labels_)
+    assert km_1.inertia_ == km_2.inertia_
+
+
+# -- weighted k-means++ seeding (weights reach init) -----------------------
+
+def test_weighted_seeding_zero_weight_never_selected():
+    """Zero-weight points must be invisible to the seeding: with the
+    second half of the dataset at weight 0 (placed FAR away, where
+    unweighted D^2 sampling would certainly pick them), every seeded
+    centroid lies in the supported half."""
+    rng = np.random.default_rng(0)
+    near = rng.standard_normal((64, 3)).astype(np.float32)
+    far = rng.standard_normal((64, 3)).astype(np.float32) + 100.0
+    pts = jnp.asarray(np.concatenate([near, far]))
+    w = jnp.asarray(np.concatenate([np.ones(64), np.zeros(64)]),
+                    jnp.float32)
+    for seed in range(5):
+        c = np.asarray(kmeans_plusplus(jax.random.PRNGKey(seed), pts, 6,
+                                       weights=w))
+        assert np.all(np.abs(c) < 50.0), \
+            f"zero-weight point seeded as a centroid (seed {seed})"
+
+
+def test_weighted_seeding_first_draw_proportional_to_weights():
+    """The first centroid is drawn ∝ w (k=1 isolates that draw):
+    empirical frequencies over many keys match w/Σw."""
+    pts = jnp.asarray(np.eye(4, 3, dtype=np.float32) * np.arange(
+        1, 5, dtype=np.float32)[:, None])
+    w = jnp.asarray([8.0, 4.0, 2.0, 2.0])
+    keys = jax.random.split(jax.random.PRNGKey(0), 2000)
+    first = jax.vmap(
+        lambda k: kmeans_plusplus(k, pts, 1, weights=w)[0])(keys)
+    # identify which of the 4 points each draw selected
+    d = np.linalg.norm(np.asarray(first)[:, None] - np.asarray(pts)[None],
+                       axis=-1)
+    counts = np.bincount(d.argmin(1), minlength=4) / 2000
+    np.testing.assert_allclose(counts, np.asarray(w) / float(w.sum()),
+                               atol=0.05)
+
+
+def test_weighted_seeding_duplication_distributional_parity():
+    """Duplication ≡ integer weights for the SEEDING, distributionally:
+    on well-separated clusters whose sizes are expressed either as
+    duplicated points or as integer weights, both samplers pick one
+    seed per cluster at (near-)equal rates. Draw-for-draw equality is
+    impossible — the duplicated sample space has more indices — so the
+    parity claim is over outcomes, which is the defining semantics."""
+    rng = np.random.default_rng(3)
+    centers = np.asarray([[0, 0], [40, 0], [0, 40]], np.float32)
+    base = np.concatenate(
+        [c + rng.standard_normal((20, 2)).astype(np.float32) * 0.1
+         for c in centers])
+    wts = rng.integers(1, 5, size=60)
+    dup = np.repeat(base, wts, axis=0)
+
+    def cluster_pick_rate(pts, weights, n_keys=60):
+        hits = 0
+        for s in range(n_keys):
+            c = np.asarray(kmeans_plusplus(
+                jax.random.PRNGKey(s), jnp.asarray(pts), 3,
+                weights=weights))
+            got = set(np.linalg.norm(
+                c[:, None] - centers[None], axis=-1).argmin(1).tolist())
+            hits += (got == {0, 1, 2})
+        return hits / n_keys
+
+    r_w = cluster_pick_rate(base, jnp.asarray(wts, jnp.float32))
+    r_d = cluster_pick_rate(dup, None)
+    assert r_w > 0.9 and r_d > 0.9
+    assert abs(r_w - r_d) < 0.1
+
+
+def test_streaming_weighted_cold_start_reaches_seeder():
+    """The streaming cold start forwards buffered weights into the
+    k-means++ init: zero-weight poison points far from the data never
+    become centroids, even though they dominate unweighted D^2."""
+    rng = np.random.default_rng(1)
+    good = rng.standard_normal((96, 3)).astype(np.float32)
+    poison = rng.standard_normal((32, 3)).astype(np.float32) + 200.0
+    pts = np.concatenate([good, poison])
+    w = np.concatenate([np.ones(96), np.zeros(32)]).astype(np.float32)
+    skm = StreamingKMeans(4, init_size=128, seed=0)
+    skm.partial_fit(pts, shard_id=0, sample_weight=w)
+    assert skm.initialized
+    assert np.all(np.abs(skm.cluster_centers_) < 100.0)
 
 
 def test_streaming_weighted_counts_are_weight_mass():
     """Weighted streaming: the EMA's effective counts accumulate the
     WEIGHT MASS (not the row count), and doubling every weight doubles
-    the mass without moving the centroids."""
+    the mass without moving the centroids. The baseline feeds explicit
+    weight-1.0 so both runs seed through the weighted sampler (uniform
+    weights of ANY scale produce identical categorical draws — the
+    logits shift is uniform)."""
     pts, _, _ = make_points(1024, 6, 4, seed=9)
+    w1 = np.ones((256,), np.float32)
     w = np.full((256,), 2.0, np.float32)
     sk_1 = StreamingKMeans(4, seed=2, decay=1.0)
     sk_2 = StreamingKMeans(4, seed=2, decay=1.0)
     for i in range(4):
         b = pts[i * 256:(i + 1) * 256]
-        sk_1.partial_fit(b, shard_id=i)
+        sk_1.partial_fit(b, shard_id=i, sample_weight=w1)
         sk_2.partial_fit(b, shard_id=i, sample_weight=w)
     assert float(sk_2.counts_.sum()) == pytest.approx(
         2.0 * float(sk_1.counts_.sum()))
