@@ -9,6 +9,7 @@ dense argmin, and records the row under the ``"predict"`` key of
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -74,7 +75,21 @@ def write_json(row, path="BENCH_kmeans.json"):
     return path
 
 
-def main(scale=1.0, json_path=None):
+def main(argv=None, *, scale=None, json_path=None):
+    # CLI args used to be parsed by nobody: ``--scale 0.1 --out ""``
+    # silently ran the full-scale bench AND overwrote the committed
+    # BENCH row. Parse them for real (keyword args still win so tests
+    # and run.py can call main() directly).
+    if scale is None and json_path is None:
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--scale", type=float, default=1.0)
+        ap.add_argument("--out", default="BENCH_kmeans.json",
+                        help="perf JSON to merge the predict row into "
+                             "('' disables)")
+        args = ap.parse_args(argv)
+        scale, json_path = args.scale, args.out
+    elif scale is None:
+        scale = 1.0
     row = run(scale=scale)
     print("name,us_per_call,derived")
     print(f"predict/{row['dataset']},{row['predict_ms'] * 1e3:.1f},"
@@ -86,4 +101,4 @@ def main(scale=1.0, json_path=None):
 
 
 if __name__ == "__main__":
-    main(json_path="BENCH_kmeans.json")
+    main()

@@ -34,7 +34,15 @@ tuned configurations.
 * requires the committed ``distributed`` record (when present) to keep
   compact/dense parity and a per-shard work reduction > 1.0;
 * smoke-measures the tiled predict path (``predict_bench``): exact
-  parity with the dense argmin gates, throughput is logged;
+  parity with the dense argmin gates, and fresh throughput must stay
+  above the committed row * ``--check-tolerance`` (the drift gate —
+  the committed predict row is a real baseline, not a log line);
+* measures the serving subsystem (``serve_bench``): per-epoch oracle
+  parity under a concurrent publisher gates, the COMMITTED serve row
+  must show >= 8x the committed predict row's points/s (the ISSUE 10
+  tentpole claim), fresh serve throughput must stay above the
+  committed row * tolerance, and the open-loop p99 must stay under
+  the ceiling;
 * runs the deterministic weighted-parity gate: uniform ``sample_weight``
   bit-identical to unweighted on every backend, integer weights ==
   duplicated points.
@@ -167,7 +175,7 @@ def check(args) -> None:
     from repro.obs import MetricsRegistry, profile
 
     from . import (kmeans_speedup, predict_bench, resilience_bench,
-                   streaming_bench)
+                   serve_bench, streaming_bench)
 
     reg = MetricsRegistry()
     gates: dict = {}          # name -> ok, in report order
@@ -288,14 +296,45 @@ def check(args) -> None:
     ov_ok, ov_detail, _, _ = telemetry_overhead_gate(reg)
     gate("telemetry-overhead", ov_ok, ov_detail)
 
-    # predict-throughput smoke row: the tiled PassCore assign must be
-    # exact (parity with the dense argmin is structural) and actually
-    # move points; throughput is printed for the log, only parity gates
+    # predict row: the tiled PassCore assign must be exact (parity with
+    # the dense argmin is structural), and fresh throughput must hold
+    # the committed row within tolerance — the committed predict row is
+    # the serve gate's 8x denominator, so drift here is gated, not
+    # just logged
     prow = predict_bench.run(scale=scale)
+    cpred = (committed.get("predict") or {}).get("points_per_sec", 0.0)
+    pred_floor = cpred * args.check_tolerance
     gate("predict",
-         prow["labels_match_dense"] and prow["points_per_sec"] > 0,
-         f"pps={prow['points_per_sec']:.0f} parity="
+         prow["labels_match_dense"] and prow["points_per_sec"] > 0
+         and prow["points_per_sec"] >= pred_floor,
+         f"pps={prow['points_per_sec']:.0f} committed={cpred:.0f} "
+         f"floor={pred_floor:.0f} parity="
          f"{'OK' if prow['labels_match_dense'] else 'FAIL'}")
+
+    # serving subsystem: batched throughput + swap consistency.
+    # serve-parity is structural (every sampled response must match
+    # ITS OWN epoch's dense oracle exactly, under a concurrent
+    # publisher). serve-throughput is the tentpole claim: the
+    # COMMITTED serve row >= 8x the committed predict row
+    # (deterministic, record-shape), and the fresh measurement must
+    # hold the committed row within tolerance.
+    svrow, _ = serve_bench.run(scale=scale)
+    cserve = (committed.get("serve") or {}).get("points_per_sec", 0.0)
+    ratio = cserve / max(cpred, 1e-9)
+    serve_floor = cserve * args.check_tolerance
+    gate("serve-parity",
+         svrow["labels_match_dense"] and svrow["requests"] > 0
+         and svrow["epochs_seen"] >= 1,
+         f"parity={'OK' if svrow['labels_match_dense'] else 'FAIL'} "
+         f"requests={svrow['requests']} epochs={svrow['epochs_seen']}")
+    gate("serve-throughput",
+         cserve > 0 and ratio >= 8.0
+         and svrow["points_per_sec"] >= serve_floor,
+         f"committed serve/predict={ratio:.2f}x (need >=8) "
+         f"fresh={svrow['points_per_sec']:.0f} floor={serve_floor:.0f}")
+    gate("serve-p99", svrow["p99_ms"] <= 50.0,
+         f"p50={svrow['p50_ms']:.2f}ms p99={svrow['p99_ms']:.2f}ms "
+         f"(ceiling 50ms)")
 
     gate("weighted-parity", weighted_parity_gate())
 
@@ -385,6 +424,11 @@ def main() -> None:
     streaming_bench.main(scale=scale, json_path=args.json or None)
     print("# === predict path (tiled PassCore assign) ===", flush=True)
     predict_bench.main(scale=scale, json_path=args.json or None)
+    print("# === serve path (batched assign, epoch-swapped index) ===",
+          flush=True)
+    from . import serve_bench
+    serve_bench.main(["--scale", str(scale), "--out", args.json or "",
+                      "--hist-out", ""])
     print("# === resilience (checkpointed streaming, crash replay) ===",
           flush=True)
     resilience_bench.main(scale=scale, json_path=args.json or None)

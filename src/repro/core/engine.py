@@ -1703,6 +1703,8 @@ def assign(points, centroids, *, n_groups: int | None = None,
         centroids = centroids.astype(jnp.float32)
     n = points.shape[0]
     k = centroids.shape[0]
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32))
     if groups is None:
         groups, members, gsize = build_assign_tables(centroids, n_groups)
     n_groups = int(gsize.shape[0])
@@ -1725,3 +1727,112 @@ def assign(points, centroids, *, n_groups: int | None = None,
     labels = jnp.concatenate(labels)[:n]
     dists = jnp.concatenate(dists)[:n]
     return labels, dists
+
+
+# --------------------------------------------------------------------------
+# serve-side batched assignment (repro.serve drives this)
+# --------------------------------------------------------------------------
+#
+# The serving hot path differs from `assign` in three ways:
+#
+# * centroids/norms are RUNTIME ARGUMENTS, not trace constants — the
+#   double-buffered epoch swap (repro.serve.CentroidIndex) republishes
+#   centroids continuously, and a publish must never recompile. The
+#   compiled-program cache is keyed on the query bucket shape only.
+# * the reduction is the min-trick, not argmin: XLA's row-wise argmin
+#   does not vectorise when reducing the minor axis on CPU (it costs
+#   ~8x the distance GEMM at K=64); `min` does. Two vectorised min
+#   passes — the distance minimum, then the smallest index attaining
+#   it — reproduce argmin's first-match semantics exactly, so labels
+#   stay bit-identical to the dense oracle.
+# * batches arrive pre-padded to a pow2 bucket, so there is no ragged
+#   tail handling here; `lax.map` over `chunk`-point tiles keeps the
+#   per-tile (chunk, K) working set cache-resident.
+
+def _serve_fused_impl(q, centroids, c2, *, chunk: int = 1024):
+    """Fused dense batched assignment: norm-cached distance GEMM +
+    min-trick label reduction, tiled by ``chunk``. Exact (bit-identical
+    to ``argmin`` of the dense distance matrix). Returns (B,) int32."""
+    k = centroids.shape[0]
+    iota = jnp.arange(k, dtype=jnp.int32)
+
+    def tile_fn(qt):
+        # ||x||^2 omitted: constant per row, argmin-invariant
+        d2 = c2[None, :] - 2.0 * (qt @ centroids.T)
+        mn = jnp.min(d2, axis=1, keepdims=True)
+        return jnp.min(jnp.where(d2 <= mn, iota[None, :], k),
+                       axis=1).astype(jnp.int32)
+
+    b, d = q.shape
+    if b > chunk and b % chunk == 0:
+        return jax.lax.map(tile_fn, q.reshape(-1, chunk, d)).reshape(-1)
+    return tile_fn(q)
+
+
+serve_assign_fused = jax.jit(_serve_fused_impl,
+                             static_argnames=("chunk",))
+# donated variant: the query buffer is dead after the labels are read,
+# so accelerators may reuse it in place. No-op on CPU (jax warns), so
+# make_serve_assign only routes here off-CPU.
+serve_assign_fused_donated = jax.jit(_serve_fused_impl,
+                                     static_argnames=("chunk",),
+                                     donate_argnums=(0,))
+
+
+@functools.partial(jax.jit, static_argnames=("core",))
+def serve_assign_grouped(q, centroids, c2, groups, members, gsize, *,
+                         core: PassCore):
+    """Group-table batched assignment: the PassCore candidate pass with
+    vacuous bounds (the same pass `assign` tiles), with centroids and
+    group tables as runtime args so epoch swaps never recompile. The
+    ``pallas`` backend routes to the ``grouped_assign`` block-skip
+    kernel. Returns (B,) int32."""
+    b = q.shape[0]
+    x2 = row_norms_sq(q)
+    a0 = jnp.zeros((b,), jnp.int32)
+    ub = jnp.full((b,), jnp.inf, jnp.float32)
+    lb = jnp.zeros((b, core.n_groups), jnp.float32)
+    need = jnp.ones((b,), bool)
+    nas, _, _, _, _ = core.candidate_pass(
+        q, centroids, a0, ub, lb, need, groups, members, gsize,
+        x2=x2, c2=c2)
+    return nas
+
+
+def make_serve_assign(snapshot_shape, *, backend: str = "fused",
+                      chunk: int = 1024, interpret: bool = False,
+                      donate: bool | None = None):
+    """Resolve the serve-side batched assign callable for a centroid
+    snapshot shape ``(k, n_groups)``.
+
+    Returns ``fn(q, centroids, c2, groups, members, gsize) -> labels``
+    — a uniform signature over all backends (the fused path ignores
+    the tables). ``backend``: ``"fused"`` (dense GEMM + min-trick, the
+    CPU winner), ``"grouped"`` (PassCore compact pass over the group
+    tables), or ``"pallas"`` (the block-skip kernel; ``interpret=True``
+    off-TPU). All three are exact. ``donate`` (default: on except CPU,
+    where donation is a no-op) donates the query buffer on the fused
+    path."""
+    k, n_groups = snapshot_shape
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    if backend == "fused":
+        fused = serve_assign_fused_donated if donate \
+            else serve_assign_fused
+
+        def run(q, centroids, c2, groups=None, members=None, gsize=None):
+            return fused(q, centroids, c2, chunk=chunk)
+        run.cache_size = fused._cache_size
+        return run
+    if backend not in ("grouped", "pallas"):
+        raise ValueError(f"unknown serve backend {backend!r}")
+    pc_backend = "pallas" if backend == "pallas" else "compact"
+
+    def run(q, centroids, c2, groups, members, gsize):
+        core = PassCore(backend=pc_backend, k=k, n_groups=n_groups,
+                        cap_n=q.shape[0], cap_g=n_groups, chunk=chunk,
+                        interpret=interpret)
+        return serve_assign_grouped(q, centroids, c2, groups, members,
+                                    gsize, core=core)
+    run.cache_size = serve_assign_grouped._cache_size
+    return run

@@ -1,0 +1,30 @@
+"""K-means as a live index: batched low-latency centroid serving.
+
+The serving subsystem (see ``docs/serving.md``) turns fitted centroids
+into an online assignment service:
+
+* :class:`CentroidIndex` — double-buffered epoch swap: fitters
+  ``publish()`` new centroids (group tables rebuilt or reused on the
+  drift ledger's word), servers ``acquire()`` immutable snapshots.
+  Serving never blocks on fitting, and a query batch sees exactly one
+  epoch.
+* :class:`ServeEngine` — request micro-batching with a steady loop:
+  pow2 bucket padding (ragged traffic never recompiles), one snapshot
+  per batch, the batched exact assign hot path
+  (``engine.make_serve_assign``), metrics on the shared registry.
+* ``StreamingKMeans.attach_index(index)`` — continuous refresh: the
+  streaming fitter publishes after every committed mini-batch.
+
+Quick start::
+
+    from repro.serve import CentroidIndex, ServeEngine
+
+    index = CentroidIndex(km.cluster_centers_)
+    with ServeEngine(index) as eng:
+        labels, epoch = eng.assign(queries)
+"""
+from .engine import ServeEngine, ServeResult
+from .index import CentroidIndex, CentroidSnapshot
+
+__all__ = ["CentroidIndex", "CentroidSnapshot", "ServeEngine",
+           "ServeResult"]

@@ -1,0 +1,336 @@
+"""The serving steady loop: request micro-batching over the epoch-swapped
+centroid index.
+
+Adapted from the seed's LM serving launcher (prefill/decode steady
+loop over jitted step functions) to the k-means workload: requests are
+ragged (m, D) query blocks, the "step" is one batched exact assign
+(:func:`repro.core.engine.make_serve_assign`), and the model state is
+a :class:`~repro.serve.index.CentroidSnapshot` acquired fresh per
+batch, so a centroid publish lands between batches, never inside one.
+
+Shape discipline is what makes this fast: coalesced batches pad up to
+a pow2 bucket in ``[min_bucket, max_batch]``, so the set of compiled
+programs is the bucket lattice — ragged traffic never recompiles, and
+an epoch swap never recompiles (centroids are runtime arguments of the
+jitted assign). Pad buffers are reused per bucket (no per-batch
+allocation, and no zeroing — padded rows produce labels that are
+sliced away).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from ..core import engine as _engine
+from ..obs import normalize_obs
+from ..tune import DEFAULT_SERVE_CONFIG, ServeConfig, lookup_serve
+from .index import CentroidIndex
+
+_FILL_BUCKETS = (0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
+
+
+class ServeResult(NamedTuple):
+    """One request's response: labels + the exact epoch that produced
+    them (the swap-consistency contract: ONE epoch, never a mix)."""
+    labels: np.ndarray              # (m,) int32
+    epoch: int
+
+
+class _Request(NamedTuple):
+    points: np.ndarray              # (m, D) f32
+    future: Future
+    t_submit: float
+    part: "_Split | None"           # set when a jumbo request was split
+
+
+class _Split:
+    """Aggregates the parts of a request larger than ``max_batch``.
+    Parts are served in submission order by possibly different batches
+    (and epochs); the user future resolves with the FIRST part's epoch
+    and the concatenated labels once every part lands."""
+
+    def __init__(self, future: Future, n_parts: int):
+        self.future = future
+        self.labels: list = [None] * n_parts
+        self.epochs: list = [None] * n_parts
+        self._left = n_parts
+        self._lock = threading.Lock()
+
+    def deliver(self, i: int, labels: np.ndarray, epoch: int) -> None:
+        with self._lock:
+            self.labels[i] = labels
+            self.epochs[i] = epoch
+            self._left -= 1
+            done = self._left == 0
+        if done:
+            self.future.set_result(ServeResult(
+                np.concatenate(self.labels), self.epochs[0]))
+
+
+class ServeEngine:
+    """Micro-batching front-end over a :class:`CentroidIndex`.
+
+    ``submit`` enqueues a (m, D) query block and returns a
+    ``concurrent.futures.Future`` resolving to :class:`ServeResult`;
+    a background thread drains the queue, coalesces requests up to
+    ``config.max_batch`` points, pads to the pow2 bucket, binds ONE
+    index snapshot, runs the batched assign, and fans the label slices
+    back out. ``assign`` is the synchronous convenience wrapper.
+
+    Configuration comes from ``config=`` or the tuned ``serve|`` cache
+    family (:func:`repro.tune.lookup_serve`) when ``tune != "off"``.
+    Use as a context manager, or ``start()``/``stop()`` explicitly.
+    """
+
+    def __init__(self, index: CentroidIndex, *,
+                 config: ServeConfig | None = None, tune: str = "on",
+                 obs=None, interpret: bool | None = None):
+        self._index = index
+        self._cfg = config
+        self._tune = tune
+        self._obs = normalize_obs(obs)
+        self._interpret = interpret
+        self._q: queue.Queue = queue.Queue()
+        self._thread: threading.Thread | None = None
+        self._running = False
+        self._buffers: dict = {}        # bucket -> reused (bucket, D) f32
+        self._assign = None             # resolved per snapshot shape
+        self._assign_shape = None
+        self._last_epoch = None
+        self.batches = 0
+        self.points = 0
+        self.epoch_swaps = 0
+        self._metrics = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "ServeEngine":
+        if self._running:
+            return self
+        if self._obs is not None:
+            reg = self._obs.resolve_registry()
+            self._metrics = {
+                "depth": reg.gauge("serve_queue_depth",
+                                   "requests waiting in the serve queue"),
+                "fill": reg.histogram(
+                    "serve_batch_fill",
+                    "coalesced points / bucket capacity per batch",
+                    buckets=_FILL_BUCKETS),
+                "batches": reg.counter("serve_batches_total",
+                                       "batches served"),
+                "points": reg.counter("serve_points_total",
+                                      "query points served"),
+                "swaps": reg.counter(
+                    "serve_epoch_swaps_total",
+                    "batches that first observed a new epoch"),
+                "latency": reg.histogram(
+                    "serve_latency_seconds",
+                    "submit-to-labels latency per request"),
+            }
+        self._running = True
+        self._thread = threading.Thread(target=self._loop,
+                                        name="serve-engine", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain outstanding requests, then stop the loop."""
+        if not self._running:
+            return
+        self._running = False
+        self._q.put(None)               # wake the loop
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "ServeEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client side -------------------------------------------------------
+
+    def submit(self, points) -> Future:
+        """Enqueue one query block; returns a Future of
+        :class:`ServeResult`. Blocks >``max_batch`` points are split
+        into max_batch-sized parts transparently.
+
+        A device-resident f32 ``jax.Array`` block skips host staging
+        entirely: the exact-fit batch path hands it straight to the
+        jitted assign, so in-process clients that already hold device
+        arrays (a streaming fitter re-labelling its shards, a VQ
+        pipeline) pay no host round-trip. Host numpy blocks pay one
+        staging copy."""
+        if not self._running:
+            raise RuntimeError("ServeEngine is not running; call "
+                               "start() or use it as a context manager")
+        if not (isinstance(points, jax.Array)
+                and points.dtype == np.float32):
+            points = np.ascontiguousarray(points, dtype=np.float32)
+        if points.ndim != 2:
+            raise ValueError(f"points must be (m, d), got "
+                             f"{points.shape}")
+        fut: Future = Future()
+        m = points.shape[0]
+        now = time.perf_counter()
+        cap = self._config().max_batch
+        if m == 0:
+            snap = self._index._snap
+            fut.set_result(ServeResult(np.zeros((0,), np.int32),
+                                       snap.epoch if snap else 0))
+            return fut
+        if m <= cap:
+            self._q.put(_Request(points, fut, now, None))
+            return fut
+        parts = [points[lo:lo + cap] for lo in range(0, m, cap)]
+        split = _Split(fut, len(parts))
+        for i, part in enumerate(parts):
+            pf: Future = Future()
+            pf.add_done_callback(
+                lambda f, i=i: split.deliver(i, *f.result()))
+            self._q.put(_Request(part, pf, now, split))
+        return fut
+
+    def assign(self, points) -> ServeResult:
+        """Synchronous convenience: submit + wait."""
+        return self.submit(points).result()
+
+    # -- the steady loop ---------------------------------------------------
+
+    def _config(self) -> ServeConfig:
+        if self._cfg is None:
+            cfg = None
+            if self._tune != "off" and self._index.ready:
+                snap = self._index._snap
+                cfg = lookup_serve(k=snap.k, d=snap.d)
+            self._cfg = cfg or DEFAULT_SERVE_CONFIG
+        return self._cfg
+
+    def _bucket(self, count: int) -> int:
+        cfg = self._config()
+        return _engine._bucket_cap(count, cfg.min_bucket, cfg.max_batch)
+
+    def _resolve_assign(self, snap):
+        shape = (snap.k, snap.n_groups)
+        if self._assign is None or self._assign_shape != shape:
+            cfg = self._config()
+            interpret = self._interpret
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            self._assign = _engine.make_serve_assign(
+                shape, backend=cfg.backend, chunk=cfg.chunk,
+                interpret=interpret)
+            self._assign_shape = shape
+        return self._assign
+
+    def _drain(self, first: _Request) -> list:
+        """Coalesce up to max_batch points, optionally lingering
+        ``max_wait_us`` for batch fill."""
+        cfg = self._config()
+        reqs = [first]
+        total = first.points.shape[0]
+        deadline = first.t_submit + cfg.max_wait_us * 1e-6
+        while total < cfg.max_batch:
+            try:
+                nxt = self._q.get_nowait()
+            except queue.Empty:
+                wait = deadline - time.perf_counter()
+                if wait <= 0:
+                    break
+                try:
+                    nxt = self._q.get(timeout=wait)
+                except queue.Empty:
+                    break
+            if nxt is None:             # stop sentinel: put it back
+                self._q.put(None)
+                break
+            reqs.append(nxt)
+            total += nxt.points.shape[0]
+        return reqs
+
+    def _serve_batch(self, reqs: list) -> None:
+        total = sum(r.points.shape[0] for r in reqs)
+        bucket = self._bucket(total)
+        if len(reqs) == 1 and reqs[0].points.shape[0] == bucket:
+            batch = reqs[0].points      # exact-fit fast path: zero copy
+        else:
+            d = reqs[0].points.shape[1]
+            buf = self._buffers.get(bucket)
+            if buf is None or buf.shape[1] != d:
+                buf = np.empty((bucket, d), np.float32)
+                self._buffers[bucket] = buf
+            off = 0
+            for r in reqs:
+                m = r.points.shape[0]
+                buf[off:off + m] = r.points
+                off += m
+            batch = buf                 # rows >= total are stale — fine,
+        snap = self._index.acquire()    # their labels are sliced away
+        fn = self._resolve_assign(snap)
+        labels = np.asarray(fn(batch, snap.centroids, snap.c2,
+                               snap.groups, snap.members, snap.gsize))
+        now = time.perf_counter()
+        off = 0
+        for r in reqs:
+            m = r.points.shape[0]
+            r.future.set_result(ServeResult(labels[off:off + m],
+                                            snap.epoch))
+            off += m
+        self.batches += 1
+        self.points += total
+        swapped = self._last_epoch is not None \
+            and snap.epoch != self._last_epoch
+        if swapped:
+            self.epoch_swaps += 1
+        self._last_epoch = snap.epoch
+        if self._metrics is not None:
+            mt = self._metrics
+            mt["depth"].set(float(self._q.qsize()))
+            mt["fill"].observe(total / bucket)
+            mt["batches"].inc()
+            mt["points"].inc(float(total))
+            if swapped:
+                mt["swaps"].inc()
+            for r in reqs:
+                mt["latency"].observe(now - r.t_submit)
+
+    def _loop(self) -> None:
+        while True:
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                if not self._running:
+                    return
+                continue
+            if first is None:
+                if self._running:       # spurious wake
+                    continue
+                # drain what's left, then exit
+                rest = []
+                while True:
+                    try:
+                        r = self._q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if r is not None:
+                        rest.append(r)
+                for r in rest:
+                    if self._index.ready:
+                        self._serve_batch([r])
+                    else:
+                        r.future.set_exception(RuntimeError(
+                            "ServeEngine stopped before any centroids "
+                            "were published"))
+                return
+            if not self._index.ready:
+                # nothing published yet: requeue and wait briefly
+                self._q.put(first)
+                time.sleep(0.005)
+                continue
+            self._serve_batch(self._drain(first))

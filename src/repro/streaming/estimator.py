@@ -175,6 +175,11 @@ class StreamingKMeans:
         # left TORN (device centroids advanced, host bookkeeping not)
         # and only a checkpoint restore makes it consistent again.
         self.chaos_hook = None
+        # continuous-refresh seam: a repro.serve.CentroidIndex that
+        # receives a publish after every _publish_every committed
+        # batches (see attach_index)
+        self._serve_index = None
+        self._publish_every = 1
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -460,6 +465,15 @@ class StreamingKMeans:
         self._since_hit = np.where(bcounts_np > 0, 0, self._since_hit + 1)
         self._push_far(pts_np, ub_np)
         self._maybe_reseed()
+
+        if self._serve_index is not None and \
+                st.batches % self._publish_every == 0:
+            # continuous refresh: the serving index swaps in this
+            # batch's committed centroids. The cumulative drift ledger
+            # rides along so the index can decide table rebuild vs
+            # reuse; serving never blocks (the swap is one reference).
+            self._serve_index.publish(
+                self._centroids, cum_drift=self._ledger.centroid)
 
         if self._obs is not None:
             # the step's device_get above already blocked, so this
@@ -750,6 +764,23 @@ class StreamingKMeans:
             self._counts = jnp.asarray(np.asarray(counts, np.float32))
 
     # -- stream driving ----------------------------------------------------
+
+    def attach_index(self, index, every: int = 1) -> "StreamingKMeans":
+        """Continuous refresh: publish committed centroids into a
+        :class:`repro.serve.CentroidIndex` every ``every`` batches.
+
+        The publish happens AFTER the host-side commit of each batch
+        (ledger updated, cache stored), so a served snapshot is always
+        a state the fit actually passed through — and carries the
+        cumulative drift ledger, letting the index reuse group tables
+        across small-drift epochs. Detach with ``attach_index(None)``.
+        """
+        self._serve_index = index
+        self._publish_every = max(int(every), 1)
+        if index is not None and self.initialized:
+            index.publish(self._centroids,
+                          cum_drift=self._ledger.centroid)
+        return self
 
     def fit_stream(self, source, epochs: int = 1,
                    max_batches: int | None = None, *,

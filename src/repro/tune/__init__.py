@@ -22,6 +22,8 @@ from .cache import (ENV_VAR, TuneCache, default_cache, default_path,
                     set_default_cache)
 from .search import (autotune, get_or_tune, sharded_timing_measure,
                      timing_measure)
+from .serve import (DEFAULT_SERVE_CONFIG, ServeConfig, autotune_serve,
+                    lookup_serve, serve_signature)
 from .signature import pow2_bucket, signature
 
 __all__ = [
@@ -29,6 +31,8 @@ __all__ = [
     "default_path", "set_default_cache", "autotune", "get_or_tune",
     "timing_measure", "sharded_timing_measure", "signature",
     "pow2_bucket", "lookup", "ENV_VAR",
+    "ServeConfig", "DEFAULT_SERVE_CONFIG", "serve_signature",
+    "lookup_serve", "autotune_serve",
 ]
 
 

@@ -1,0 +1,68 @@
+"""Edge cases of the tiled exact assign (``engine.assign``) — the
+predict/serve hot path must stay exact off the happy path."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pairwise_sq_dists
+from repro.core import engine as _engine
+
+
+def _dense_labels(q, centroids):
+    return np.asarray(jnp.argmin(
+        pairwise_sq_dists(jnp.asarray(q), jnp.asarray(centroids)), axis=1))
+
+
+def _mk(n, d, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+def test_assign_empty_batch():
+    centroids = _mk(8, 4, 0)
+    labels, dists = _engine.assign(np.zeros((0, 4), np.float32),
+                                   centroids)
+    assert labels.shape == (0,) and labels.dtype == jnp.int32
+    assert dists.shape == (0,)
+
+
+def test_assign_n_not_tile_multiple():
+    """N that is neither a tile_n multiple nor a pow2 — the tail tile
+    must still be exact."""
+    q = _mk(1000, 8, 1)
+    centroids = _mk(16, 8, 2)
+    labels, _ = _engine.assign(q, centroids, tile_n=256)
+    assert labels.shape == (1000,)
+    assert np.array_equal(np.asarray(labels), _dense_labels(q, centroids))
+
+
+def test_assign_k_equals_one():
+    q = _mk(300, 8, 3)
+    centroids = _mk(1, 8, 4)
+    labels, dists = _engine.assign(q, centroids)
+    assert np.array_equal(np.asarray(labels), np.zeros(300, np.int32))
+    # dists are Euclidean (the Yinyang bound convention), not squared
+    ref = np.sqrt(np.sum((q - centroids[0]) ** 2, axis=1))
+    assert np.allclose(np.asarray(dists), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_assign_single_group():
+    """n_groups=1 degenerates the candidate pass to the dense sweep —
+    still exact."""
+    q = _mk(700, 8, 5)
+    centroids = _mk(24, 8, 6)
+    labels, _ = _engine.assign(q, centroids, n_groups=1)
+    assert np.array_equal(np.asarray(labels), _dense_labels(q, centroids))
+
+
+def test_serve_fused_tail_not_chunk_multiple():
+    """The fused serve kernel's lax.map tiling only engages on exact
+    chunk multiples; any other size must fall back to one tile and
+    stay exact."""
+    for n in (48, 1536):                 # < chunk, and 1.5x chunk
+        q = _mk(n, 8, 7)
+        centroids = _mk(16, 8, 8)
+        cj = jnp.asarray(centroids)
+        from repro.core.distances import row_norms_sq
+        labels = np.asarray(_engine.serve_assign_fused(
+            jnp.asarray(q), cj, row_norms_sq(cj), chunk=1024))
+        assert np.array_equal(labels, _dense_labels(q, centroids))

@@ -50,12 +50,15 @@ def test_train_launcher_cli(tmp_path):
     assert "loss" in out.stdout
 
 
-def test_serve_launcher_cli():
+def test_serve_example_cli():
+    """The serving demo end to end: a live streaming fit publishing
+    into the index while the engine answers queries — the epoch must
+    visibly advance and traffic must move."""
     out = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch",
-         "mamba2-780m", "--reduced", "--batch", "2", "--prompt-len", "8",
-         "--gen-len", "4"],
+        [sys.executable, os.path.join(ROOT, "examples",
+                                      "serve_kmeans.py"), "--smoke"],
         env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
         capture_output=True, text=True, timeout=540)
     assert out.returncode == 0, out.stderr[-2000:]
-    assert "tok/s" in out.stdout
+    assert "pts/s" in out.stdout
+    assert "epoch ->" in out.stdout
