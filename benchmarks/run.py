@@ -42,7 +42,8 @@ tuned configurations.
   must show >= 8x the committed predict row's points/s (the ISSUE 10
   tentpole claim), fresh serve throughput must stay above the
   committed row * tolerance, and the open-loop p99 must stay under
-  the ceiling;
+  a machine-aware ceiling (max of ``--serve-p99-ceiling-ms`` and the
+  committed row's p99 / tolerance);
 * runs the deterministic weighted-parity gate: uniform ``sample_weight``
   bit-identical to unweighted on every backend, integer weights ==
   duplicated points.
@@ -332,9 +333,18 @@ def check(args) -> None:
          and svrow["points_per_sec"] >= serve_floor,
          f"committed serve/predict={ratio:.2f}x (need >=8) "
          f"fresh={svrow['points_per_sec']:.0f} floor={serve_floor:.0f}")
-    gate("serve-p99", svrow["p99_ms"] <= 50.0,
+    # p99 is the one wall-clock-fresh latency gate, so it must absorb
+    # shared-runner noise: the ceiling is the committed row's p99
+    # widened by the check tolerance, floored at --serve-p99-ceiling-ms
+    # so a very fast committed row never produces a hair-trigger gate
+    cp99 = (committed.get("serve") or {}).get("p99_ms", 0.0)
+    p99_ceiling = max(args.serve_p99_ceiling_ms,
+                      cp99 / max(args.check_tolerance, 1e-9))
+    gate("serve-p99", svrow["p99_ms"] <= p99_ceiling,
          f"p50={svrow['p50_ms']:.2f}ms p99={svrow['p99_ms']:.2f}ms "
-         f"(ceiling 50ms)")
+         f"(ceiling {p99_ceiling:.1f}ms = max(floor "
+         f"{args.serve_p99_ceiling_ms:.1f}ms, committed {cp99:.2f}ms "
+         f"/ tolerance {args.check_tolerance}))")
 
     gate("weighted-parity", weighted_parity_gate())
 
@@ -398,6 +408,11 @@ def main() -> None:
                     help="--check fails when fresh mean_speedup drops "
                          "below committed * this factor (default 0.6 — "
                          "shared-CI timing noise is large)")
+    ap.add_argument("--serve-p99-ceiling-ms", type=float, default=50.0,
+                    help="minimum serve-p99 ceiling; the gate uses "
+                         "max(this, committed p99 / check-tolerance) "
+                         "so loaded runners don't flake on a fresh "
+                         "wall-clock percentile")
     ap.add_argument("--tune", action="store_true",
                     help="refresh the engine tuning cache "
                          "(benchmarks/autotune.py) for the suite's "

@@ -1812,7 +1812,11 @@ def make_serve_assign(snapshot_shape, *, backend: str = "fused",
     tables), or ``"pallas"`` (the block-skip kernel; ``interpret=True``
     off-TPU). All three are exact. ``donate`` (default: on except CPU,
     where donation is a no-op) donates the query buffer on the fused
-    path."""
+    path — off-CPU this INVALIDATES a ``jax.Array`` the caller passes
+    in ("Array has been deleted" on its next use), so only enable it
+    for buffers the caller is done with; ``ServeEngine`` donates its
+    own staging transfers and passes ``donate=False`` for client-owned
+    device arrays on the exact-fit path."""
     k, n_groups = snapshot_shape
     if donate is None:
         donate = jax.default_backend() != "cpu"

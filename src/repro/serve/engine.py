@@ -53,17 +53,22 @@ class _Split:
     """Aggregates the parts of a request larger than ``max_batch``.
     Parts are served in submission order by possibly different batches
     (and epochs); the user future resolves with the FIRST part's epoch
-    and the concatenated labels once every part lands."""
+    and the concatenated labels once every part lands. The first part
+    that fails fails the whole request — later parts are ignored, so
+    the user future resolves exactly once either way."""
 
     def __init__(self, future: Future, n_parts: int):
         self.future = future
         self.labels: list = [None] * n_parts
         self.epochs: list = [None] * n_parts
         self._left = n_parts
+        self._failed = False
         self._lock = threading.Lock()
 
     def deliver(self, i: int, labels: np.ndarray, epoch: int) -> None:
         with self._lock:
+            if self._failed:
+                return
             self.labels[i] = labels
             self.epochs[i] = epoch
             self._left -= 1
@@ -71,6 +76,25 @@ class _Split:
         if done:
             self.future.set_result(ServeResult(
                 np.concatenate(self.labels), self.epochs[0]))
+
+    def fail(self, exc: BaseException) -> None:
+        with self._lock:
+            if self._failed:
+                return
+            self._failed = True
+        self.future.set_exception(exc)
+
+    def on_part(self, i: int):
+        """Done-callback for part ``i``'s future. Raising inside
+        ``add_done_callback`` is swallowed by concurrent.futures, so
+        the exception check must happen here, not via ``f.result()``."""
+        def cb(f: Future) -> None:
+            exc = f.exception()
+            if exc is not None:
+                self.fail(exc)
+            else:
+                self.deliver(i, *f.result())
+        return cb
 
 
 class ServeEngine:
@@ -100,8 +124,7 @@ class ServeEngine:
         self._thread: threading.Thread | None = None
         self._running = False
         self._buffers: dict = {}        # bucket -> reused (bucket, D) f32
-        self._assign = None             # resolved per snapshot shape
-        self._assign_shape = None
+        self._assigns: dict = {}        # (k, n_groups, donate) -> fn
         self._last_epoch = None
         self.batches = 0
         self.points = 0
@@ -176,12 +199,18 @@ class ServeEngine:
         if points.ndim != 2:
             raise ValueError(f"points must be (m, d), got "
                              f"{points.shape}")
+        snap = self._index._snap
+        if snap is not None and points.shape[1] != snap.d:
+            # reject here, synchronously: a wrong-D block reaching the
+            # serve thread would fail mid-batch instead
+            raise ValueError(
+                f"points have feature dim {points.shape[1]}, but the "
+                f"index serves {snap.d}-dim centroids")
         fut: Future = Future()
         m = points.shape[0]
         now = time.perf_counter()
         cap = self._config().max_batch
         if m == 0:
-            snap = self._index._snap
             fut.set_result(ServeResult(np.zeros((0,), np.int32),
                                        snap.epoch if snap else 0))
             return fut
@@ -192,8 +221,7 @@ class ServeEngine:
         split = _Split(fut, len(parts))
         for i, part in enumerate(parts):
             pf: Future = Future()
-            pf.add_done_callback(
-                lambda f, i=i: split.deliver(i, *f.result()))
+            pf.add_done_callback(split.on_part(i))
             self._q.put(_Request(part, pf, now, split))
         return fut
 
@@ -204,30 +232,37 @@ class ServeEngine:
     # -- the steady loop ---------------------------------------------------
 
     def _config(self) -> ServeConfig:
-        if self._cfg is None:
-            cfg = None
-            if self._tune != "off" and self._index.ready:
-                snap = self._index._snap
-                cfg = lookup_serve(k=snap.k, d=snap.d)
-            self._cfg = cfg or DEFAULT_SERVE_CONFIG
+        if self._cfg is not None:
+            return self._cfg
+        if not self._index.ready:
+            # the tuned lookup needs the snapshot's (k, d); do NOT
+            # memoize the fallback, or a submit racing the first
+            # publish pins the default config for the engine's lifetime
+            return DEFAULT_SERVE_CONFIG
+        cfg = None
+        if self._tune != "off":
+            snap = self._index._snap
+            cfg = lookup_serve(k=snap.k, d=snap.d)
+        self._cfg = cfg or DEFAULT_SERVE_CONFIG
         return self._cfg
 
     def _bucket(self, count: int) -> int:
         cfg = self._config()
         return _engine._bucket_cap(count, cfg.min_bucket, cfg.max_batch)
 
-    def _resolve_assign(self, snap):
-        shape = (snap.k, snap.n_groups)
-        if self._assign is None or self._assign_shape != shape:
+    def _resolve_assign(self, snap, *, donate: bool):
+        key = (snap.k, snap.n_groups, donate)
+        fn = self._assigns.get(key)
+        if fn is None:
             cfg = self._config()
             interpret = self._interpret
             if interpret is None:
                 interpret = jax.default_backend() != "tpu"
-            self._assign = _engine.make_serve_assign(
-                shape, backend=cfg.backend, chunk=cfg.chunk,
-                interpret=interpret)
-            self._assign_shape = shape
-        return self._assign
+            fn = _engine.make_serve_assign(
+                (snap.k, snap.n_groups), backend=cfg.backend,
+                chunk=cfg.chunk, interpret=interpret, donate=donate)
+            self._assigns[key] = fn
+        return fn
 
     def _drain(self, first: _Request) -> list:
         """Coalesce up to max_batch points, optionally lingering
@@ -272,7 +307,14 @@ class ServeEngine:
                 off += m
             batch = buf                 # rows >= total are stale — fine,
         snap = self._index.acquire()    # their labels are sliced away
-        fn = self._resolve_assign(snap)
+        # donation only for engine-staged input (numpy: jit transfers a
+        # fresh device copy per call, so donating it is free). A client
+        # jax.Array on the exact-fit path must NOT be donated — the
+        # client keeps using its buffer (submit() advertises exactly
+        # that), and donation would invalidate it in place.
+        donate = (jax.default_backend() != "cpu"
+                  and not isinstance(batch, jax.Array))
+        fn = self._resolve_assign(snap, donate=donate)
         labels = np.asarray(fn(batch, snap.centroids, snap.c2,
                                snap.groups, snap.members, snap.gsize))
         now = time.perf_counter()
@@ -300,6 +342,19 @@ class ServeEngine:
             for r in reqs:
                 mt["latency"].observe(now - r.t_submit)
 
+    def _serve_safely(self, reqs: list) -> None:
+        """One batch, fault-isolated: any error (backend failure, bad
+        input that slipped past submit validation) fails THIS batch's
+        futures and leaves the serve thread alive for the next batch —
+        an unhandled raise here would kill the daemon thread silently
+        and hang every pending and future request forever."""
+        try:
+            self._serve_batch(reqs)
+        except BaseException as e:
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+
     def _loop(self) -> None:
         while True:
             try:
@@ -322,7 +377,7 @@ class ServeEngine:
                         rest.append(r)
                 for r in rest:
                     if self._index.ready:
-                        self._serve_batch([r])
+                        self._serve_safely([r])
                     else:
                         r.future.set_exception(RuntimeError(
                             "ServeEngine stopped before any centroids "
@@ -333,4 +388,4 @@ class ServeEngine:
                 self._q.put(first)
                 time.sleep(0.005)
                 continue
-            self._serve_batch(self._drain(first))
+            self._serve_safely(self._drain(first))

@@ -3,6 +3,7 @@ gated table reuse, the serve knob family, and engine lifecycle."""
 import threading
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -91,7 +92,7 @@ def test_bucket_reuse_no_recompile():
     cfg = ServeConfig(min_bucket=256, max_batch=1024)
     with ServeEngine(idx, config=cfg, tune="off") as eng:
         eng.assign(q[:300])             # bucket 512: compile
-        fn = eng._assign
+        (fn,) = eng._assigns.values()
         n0 = fn.cache_size()
         for m in (257, 400, 511, 512):  # all land in bucket 512
             labels, _ = eng.assign(q[:m])
@@ -232,6 +233,92 @@ def test_engine_stop_before_publish_fails_pending():
     eng.stop()
     with pytest.raises(RuntimeError):
         fut.result(timeout=30)
+
+
+def test_engine_stop_before_publish_fails_split_jumbo():
+    """A jumbo (split) request must also fail — not hang — when the
+    engine stops with no published centroids: the part futures carry
+    the exception, and the split must propagate it to the user future
+    (``f.result()`` inside ``add_done_callback`` would be swallowed)."""
+    idx = CentroidIndex()
+    cfg = ServeConfig(min_bucket=64, max_batch=128)
+    eng = ServeEngine(idx, config=cfg, tune="off").start()
+    fut = eng.submit(_mk(300, 8, 0))      # 3 parts
+    eng.stop()
+    with pytest.raises(RuntimeError):
+        fut.result(timeout=30)
+
+
+def test_engine_submit_rejects_wrong_feature_dim():
+    """A wrong-D block must be rejected synchronously at submit — on
+    the serve thread it would fail mid-batch (and before the loop was
+    hardened, kill the thread)."""
+    idx = CentroidIndex(_mk(8, 16, 0))
+    with ServeEngine(idx, config=ServeConfig(), tune="off") as eng:
+        with pytest.raises(ValueError, match="feature dim"):
+            eng.submit(_mk(4, 8, 1))
+        labels, _ = eng.assign(_mk(4, 16, 2))   # engine still serves
+        assert labels.shape == (4,)
+
+
+def test_engine_thread_survives_batch_error():
+    """A backend failure inside one batch must fail THAT batch's
+    futures and leave the serve thread alive for the next request —
+    not die silently and hang every later submit."""
+    d, k = 8, 16
+    idx = CentroidIndex(_mk(k, d, 0))
+    cfg = ServeConfig(min_bucket=64, max_batch=512)
+    with ServeEngine(idx, config=cfg, tune="off") as eng:
+        orig = eng._resolve_assign
+
+        def boom(*a, **kw):
+            raise RuntimeError("injected backend failure")
+
+        eng._resolve_assign = boom
+        with pytest.raises(RuntimeError, match="injected"):
+            eng.submit(_mk(16, d, 1)).result(timeout=30)
+        eng._resolve_assign = orig
+        labels, _ = eng.assign(_mk(16, d, 2))
+        assert labels.shape == (16,)
+
+
+def test_engine_client_device_array_never_donated(monkeypatch):
+    """The exact-fit fast path hands the CLIENT'S jax.Array to the
+    jitted assign; off-CPU it must resolve the non-donating variant
+    (donation would invalidate the caller's buffer in place), while
+    engine-staged numpy batches keep donation. Simulated off-CPU via
+    the backend probe; on real CPU donation is a no-op either way."""
+    d, k = 8, 16
+    q = _mk(512, d, 3)
+    centroids = _mk(k, d, 1)
+    idx = CentroidIndex(centroids)
+    cfg = ServeConfig(min_bucket=64, max_batch=512)
+    with ServeEngine(idx, config=cfg, tune="off") as eng:
+        monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+        qd = jnp.asarray(q)
+        labels_dev, _ = eng.assign(qd)          # exact-fit client array
+        labels_np, _ = eng.assign(q[:300])      # staged numpy batch
+        assert {key[2] for key in eng._assigns} == {False, True}
+        # the client's buffer stays usable after serving
+        assert np.array_equal(np.asarray(qd), q)
+        assert np.array_equal(labels_dev, _dense_labels(q, centroids))
+        assert np.array_equal(labels_np,
+                              _dense_labels(q[:300], centroids))
+
+
+def test_engine_config_not_pinned_before_first_publish(monkeypatch):
+    """A submit racing the first publish must not permanently cache the
+    default config: the tuned ``serve|`` entry (which needs the
+    snapshot's k/d) must still win once centroids exist."""
+    import repro.serve.engine as se
+    tuned = ServeConfig(max_batch=2048, chunk=512)
+    monkeypatch.setattr(se, "lookup_serve", lambda **kw: tuned)
+    idx = CentroidIndex()
+    eng = ServeEngine(idx, tune="on")
+    assert eng._config() == se.DEFAULT_SERVE_CONFIG
+    assert eng._cfg is None               # fallback was NOT memoized
+    idx.publish(_mk(8, 8, 0))
+    assert eng._config() == tuned
 
 
 def test_engine_counts_and_metrics():
